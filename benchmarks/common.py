@@ -1,0 +1,73 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Each figure module exposes ``run() -> list[Row]``; benchmarks/run.py
+prints them as ``name,us_per_call,derived`` CSV (us_per_call = wall time
+of the sim/kernel call; derived = the figure's metrics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.cascade_tiers import (DEVICE_PROFILES, SERVER_PROFILES,
+                                         DeviceProfile, ServerProfile)
+from repro.core.calibration import calibrate_static_threshold
+from repro.sim import jaxsim, synthetic
+
+SEEDS = (0, 1, 2)            # paper: three seeds, report mean/min/max
+SAMPLES = 600                # per device (paper: 5000; scaled for CPU)
+DEVICE_COUNTS = (2, 5, 10, 25, 50, 100)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def static_threshold_for(dev: DeviceProfile, srv: ServerProfile) -> float:
+    cal = synthetic.calibration_set(dev.accuracy, srv.accuracy)
+    t, _ = calibrate_static_threshold(cal.confidence, cal.correct_light,
+                                      cal.correct_heavy[:, 0])
+    return t
+
+
+def run_point(scheduler: str, n: int, dev: DeviceProfile,
+              servers, slo: float, *, seeds=SEEDS, samples=SAMPLES,
+              static_t: float | None = None, **sim_kw) -> Dict:
+    """Mean/min/max over seeds of (sr, accuracy, throughput)."""
+    if static_t is None and scheduler == "static":
+        static_t = static_threshold_for(dev, servers[0])
+    srs, accs, thrs = [], [], []
+    wall = 0.0
+    for seed in seeds:
+        streams = synthetic.device_streams(
+            n, samples, dev.accuracy, [s.accuracy for s in servers], seed)
+        spec = jaxsim.JaxSimSpec(
+            scheduler=scheduler, n_devices=n, samples_per_device=samples,
+            static_threshold=static_t or 0.35, **sim_kw)
+        t0 = time.time()
+        out = jaxsim.run(spec, streams, np.full(n, dev.latency),
+                         np.full(n, slo), tuple(servers))
+        srs.append(float(out["sr"]))
+        accs.append(float(out["accuracy"]))
+        thrs.append(float(out["throughput"]))
+        wall += time.time() - t0
+    return {
+        "sr": float(np.mean(srs)), "sr_min": min(srs), "sr_max": max(srs),
+        "acc": float(np.mean(accs)),
+        "thr": float(np.mean(thrs)),
+        "wall_us": wall / len(seeds) * 1e6,
+    }
+
+
+def derived_str(d: Dict) -> str:
+    return (f"sr={d['sr']:.2f};sr_min={d['sr_min']:.2f};"
+            f"sr_max={d['sr_max']:.2f};acc={d['acc']:.4f};thr={d['thr']:.1f}")

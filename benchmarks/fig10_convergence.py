@@ -1,0 +1,21 @@
+"""Paper Fig. 10: short runs (1000 samples) expose MultiTASC's slow
+threshold convergence; MultiTASC++ is unaffected. Lenient 150 ms SLO."""
+from benchmarks.common import (DEVICE_PROFILES, SERVER_PROFILES, Row,
+                               derived_str, run_point, static_threshold_for)
+
+SLO = 0.15
+SAMPLES = 300  # paper's "reduced dataset" scaled the same way as SAMPLES
+
+
+def run():
+    dev = DEVICE_PROFILES["low"]
+    srv = SERVER_PROFILES["efficientnetb3"]
+    static_t = static_threshold_for(dev, srv)
+    rows = []
+    for sched in ("multitasc++", "multitasc"):
+        for n in (5, 10, 15, 20, 30):
+            d = run_point(sched, n, dev, [srv], SLO, samples=SAMPLES,
+                          static_t=static_t)
+            rows.append(Row(f"fig10_convergence/{sched}/n={n}", d["wall_us"],
+                            derived_str(d)))
+    return rows

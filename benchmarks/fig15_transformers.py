@@ -1,0 +1,19 @@
+"""Paper Fig. 15/16: transformer pair — MobileViT-x-small devices,
+DeiT-Base-Distilled server."""
+from benchmarks.common import (DEVICE_PROFILES, SERVER_PROFILES, Row,
+                               derived_str, run_point, static_threshold_for)
+
+SLO = 0.15
+
+
+def run():
+    dev = DEVICE_PROFILES["vit-high"]
+    srv = SERVER_PROFILES["deit-base"]
+    static_t = static_threshold_for(dev, srv)
+    rows = []
+    for sched in ("multitasc++", "static"):
+        for n in (2, 10, 25, 50, 100):
+            d = run_point(sched, n, dev, [srv], SLO, static_t=static_t)
+            rows.append(Row(f"fig15_vit/{sched}/n={n}", d["wall_us"],
+                            derived_str(d)))
+    return rows

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp reference wall
+time per call, plus the decision-function throughput that gates cascade
+serving (BvSB per sample)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.kernels import ref
+from repro.kernels.bvsb import bvsb
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.key(0)
+
+    x = jax.random.normal(key, (64, 4096))
+    rows.append(Row("kernel/bvsb/interp_64x4096",
+                    _time(lambda a: bvsb(a, interpret=True), x),
+                    "fused top-2 margin"))
+    rows.append(Row("kernel/bvsb/ref_64x4096",
+                    _time(ref.bvsb_ref, x), "softmax+topk oracle"))
+
+    q = jax.random.normal(key, (1, 1024, 4, 64))
+    k = jax.random.normal(key, (1, 1024, 2, 64))
+    v = jax.random.normal(key, (1, 1024, 2, 64))
+    rows.append(Row("kernel/flash/interp_1k",
+                    _time(lambda a, b, c: flash_attention(
+                        a, b, c, interpret=True), q, k, v), "causal GQA"))
+    rows.append(Row("kernel/flash/ref_1k",
+                    _time(lambda a, b, c: ref.flash_attention_ref(a, b, c),
+                          q, k, v), "oracle"))
+
+    qd = jax.random.normal(key, (8, 8, 64))
+    kc = jax.random.normal(key, (8, 2048, 2, 64))
+    vc = jax.random.normal(key, (8, 2048, 2, 64))
+    lens = jnp.full((8,), 2048)
+    rows.append(Row("kernel/decode/interp_w2048",
+                    _time(lambda a, b, c, d: decode_attention(
+                        a, b, c, d, interpret=True), qd, kc, vc, lens),
+                    "ring-cache decode"))
+    rows.append(Row("kernel/decode/ref_w2048",
+                    _time(ref.decode_attention_ref, qd, kc, vc, lens),
+                    "oracle"))
+
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 512, 512)))
+    u = jax.random.normal(key, (4, 512, 512))
+    rows.append(Row("kernel/rglru/interp_512x512",
+                    _time(lambda p, q2: rglru_scan(p, q2, interpret=True),
+                          a, u), "chunked linear scan"))
+    rows.append(Row("kernel/rglru/ref_512x512",
+                    _time(ref.rglru_scan_ref, a, u), "assoc-scan oracle"))
+    return rows

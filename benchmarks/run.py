@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV. ``--only fig4`` runs a subset;
+``--quick`` shrinks seeds/samples for smoke runs.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    if args.quick:
+        from benchmarks import common
+        common.SEEDS = (0,)
+        common.SAMPLES = 200
+        common.DEVICE_COUNTS = (2, 25, 100)
+
+    from benchmarks import (ablation_components, fig4_homogeneous,
+                            fig7_heavy_server, fig10_convergence,
+                            fig11_heterogeneous, fig15_transformers,
+                            fig17_switching, fig19_intermittent,
+                            kernels_bench)
+    modules = {
+        "fig4": fig4_homogeneous,
+        "fig7": fig7_heavy_server,
+        "fig10": fig10_convergence,
+        "fig11": fig11_heterogeneous,
+        "fig15": fig15_transformers,
+        "fig17": fig17_switching,
+        "fig19": fig19_intermittent,
+        "ablation": ablation_components,
+        "kernels": kernels_bench,
+    }
+    print("name,us_per_call,derived")
+    for key, mod in modules.items():
+        if args.only and args.only not in key:
+            continue
+        for row in mod.run():
+            print(row.csv())
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

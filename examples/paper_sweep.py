@@ -1,0 +1,48 @@
+"""Mini paper sweep: Fig. 4-style table from the vectorized simulator.
+
+Runs MultiTASC++ / MultiTASC / Static across device counts and prints the
+SLO-satisfaction / accuracy / throughput table (the executable version of
+the paper's headline figures).
+
+    PYTHONPATH=src python examples/paper_sweep.py [--samples 600]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.cascade_tiers import DEVICE_PROFILES, SERVER_PROFILES
+from repro.core.calibration import calibrate_static_threshold
+from repro.sim import jaxsim, synthetic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=600)
+    ap.add_argument("--slo", type=float, default=0.15)
+    args = ap.parse_args()
+
+    dev = DEVICE_PROFILES["low"]
+    srv = SERVER_PROFILES["inceptionv3"]
+    cal = synthetic.calibration_set(dev.accuracy, srv.accuracy)
+    static_t, _ = calibrate_static_threshold(
+        cal.confidence, cal.correct_light, cal.correct_heavy[:, 0])
+
+    print(f"device: {dev.model} | server: {srv.model} | SLO {args.slo*1e3:.0f} ms")
+    print(f"{'n':>4} | {'scheduler':12} | {'SR %':>7} | {'acc':>6} | {'thr/s':>8}")
+    print("-" * 52)
+    for n in (2, 10, 25, 50, 100):
+        for sched in ("multitasc++", "multitasc", "static"):
+            streams = synthetic.device_streams(
+                n, args.samples, dev.accuracy, srv.accuracy, 0)
+            spec = jaxsim.JaxSimSpec(scheduler=sched, n_devices=n,
+                                     samples_per_device=args.samples,
+                                     static_threshold=static_t)
+            out = jaxsim.run(spec, streams, np.full(n, dev.latency),
+                             np.full(n, args.slo), (srv,))
+            print(f"{n:>4} | {sched:12} | {float(out['sr']):7.2f} | "
+                  f"{float(out['accuracy']):.4f} | "
+                  f"{float(out['throughput']):8.1f}")
+
+
+if __name__ == "__main__":
+    main()

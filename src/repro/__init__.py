@@ -1,0 +1,9 @@
+"""MultiTASC++ multi-device cascade serving framework in JAX.
+
+Subpackages: repro.core (schedulers), repro.sim (simulators),
+repro.serving (live engine), repro.models (architecture zoo),
+repro.kernels (Pallas TPU kernels), repro.training, repro.launch
+(mesh/dry-run), repro.roofline, repro.configs.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,41 @@
+"""Config registry: ``get_config(name)`` / ``list_archs()``.
+
+Assigned architectures (public pool) + cascade-tier configs used by the
+MultiTASC++ serving experiments.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+
+_ARCH_MODULES = {
+    "qwen3-32b": "qwen3_32b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "gemma-7b": "gemma_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "xlstm-350m": "xlstm_350m",
+    "stablelm-12b": "stablelm_12b",
+}
+
+
+def list_archs():
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name in _ARCH_MODULES:
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+        return mod.CONFIG
+    from repro.configs import cascade_tiers
+    if name in cascade_tiers.TIERS:
+        return cascade_tiers.TIERS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get_config",
+           "list_archs"]

@@ -1,0 +1,16 @@
+"""The paper's contribution: schedulers + decision functions.
+
+Public API:
+    MultiTASCPP / MultiTASCPPConfig   (Sec. IV -- Eq. 4 + Alg. 1)
+    MultiTASC / MultiTASCConfig       (baseline [11])
+    Static                            (calibrated fixed threshold)
+    decision.METRICS                  (bvsb / top1 / entropy, Eq. 2/3)
+    switching.decide                  (server model switching, Sec. IV-E)
+    calibration.calibrate_static_threshold (Sec. V-A protocol)
+"""
+from repro.core.multitasc import MultiTASC, MultiTASCConfig
+from repro.core.multitascpp import MultiTASCPP, MultiTASCPPConfig
+from repro.core.static import Static
+
+__all__ = ["MultiTASCPP", "MultiTASCPPConfig", "MultiTASC",
+           "MultiTASCConfig", "Static"]

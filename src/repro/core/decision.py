@@ -1,0 +1,49 @@
+"""Forwarding decision functions (paper Sec. IV-A).
+
+The decision function d^i (Eq. 3) forwards a sample to the server when the
+light model's confidence falls below the device's threshold c_{i,t}:
+
+    d^i(f_l^i(x)) = 0 (keep local)  if  conf >= c_{i,t}
+                    1 (forward)     if  conf <  c_{i,t}
+
+Confidence metrics: BvSB (Eq. 2, the paper's default — fused Pallas kernel
+on-accelerator), top-1 softmax, and entropy-based (both mentioned as
+drop-in alternatives in Sec. IV-A).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def bvsb_confidence(logits):
+    """(B, V) logits -> (confidence (B,), top1 (B,))."""
+    return kops.bvsb(logits)
+
+
+def top1_confidence(logits):
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return p.max(axis=-1), p.argmax(axis=-1).astype(jnp.int32)
+
+
+def entropy_confidence(logits):
+    """Normalized 1 - H(p)/log V, so higher = more confident, range [0,1]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    ent = -(p * logp).sum(axis=-1)
+    conf = 1.0 - ent / jnp.log(logits.shape[-1])
+    return conf, logits.argmax(axis=-1).astype(jnp.int32)
+
+
+METRICS = {
+    "bvsb": bvsb_confidence,
+    "top1": top1_confidence,
+    "entropy": entropy_confidence,
+}
+
+
+def decide(confidence, threshold):
+    """Eq. 3: returns 1 (forward) where confidence < threshold."""
+    return (confidence < threshold).astype(jnp.int32)

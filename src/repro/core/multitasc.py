@@ -1,0 +1,92 @@
+"""MultiTASC baseline scheduler (Nikolaidis et al., ISCC 2023 — ref [11]).
+
+The predecessor system this paper improves upon. Its characteristics, per
+Sec. I/V of the MultiTASC++ paper:
+
+* monitors the server's *running batch size* as the congestion signal,
+  compared against an optimal batch size b* computed at initialization
+  from the server's throughput profile;
+* applies *discrete, fixed-step* threshold updates to all devices of a
+  tier when the observed batch size deviates from b*;
+* a single global latency target shared by all devices (no per-device
+  SLO targets).
+
+This reproduces the documented failure modes: an overly relaxed policy at
+low device counts, over-strict corrections at high counts (the paper's
+"dip ... followed by an overcorrection"), slow convergence (Fig. 10), and
+high run-to-run variance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTASCConfig:
+    step: float = 0.05          # fixed threshold step
+    deadband: int = 0           # tolerated |b - b*| deviation
+    window: float = 1.5         # update period (s)
+
+
+def optimal_batch(server_profile, slo: float) -> int:
+    """b*: the largest ladder batch whose batched latency still leaves
+    queueing headroom inside the SLO (computed once at initialization,
+    as MultiTASC does). The 0.3x budget reserves SLO slack for queue
+    wait + device inference."""
+    from repro.configs.cascade_tiers import BATCH_LADDER
+    best = 1
+    for b in BATCH_LADDER:
+        if b <= server_profile.max_batch and \
+                server_profile.batch_latency(b) <= 0.3 * slo:
+            best = b
+    return best
+
+
+def init_state(n_devices: int, init_threshold=0.5):
+    return {"thresh": jnp.broadcast_to(
+        jnp.asarray(init_threshold, jnp.float32), (n_devices,)).copy()}
+
+
+def update(state, observed_batch, b_opt, cfg: MultiTASCConfig, active=None):
+    """Discrete step update from the batch-size deviation signal.
+
+    observed_batch: scalar — recent running batch size at the server.
+    All (active) devices get the same step — the coarse adaptation that
+    MultiTASC++ replaces with per-device continuous control.
+    """
+    thresh = state["thresh"]
+    over = observed_batch > b_opt + cfg.deadband
+    under = observed_batch < b_opt - cfg.deadband
+    delta = jnp.where(over, -cfg.step, jnp.where(under, cfg.step, 0.0))
+    new = jnp.clip(thresh + delta, 0.0, 1.0)
+    if active is not None:
+        new = jnp.where(active, new, thresh)
+    return {"thresh": new}
+
+
+class MultiTASC:
+    name = "multitasc"
+
+    def __init__(self, n_devices: int, server_profile, slo: float,
+                 cfg: MultiTASCConfig = MultiTASCConfig(), init_threshold=0.5):
+        self.cfg = cfg
+        self.state = init_state(n_devices, init_threshold)
+        self.b_opt = optimal_batch(server_profile, slo)
+        self._recent_batch = 0
+
+    def thresholds(self):
+        return self.state["thresh"]
+
+    def on_server_batch(self, batch_size: int) -> None:
+        self._recent_batch = batch_size
+
+    def report(self, device_id: int, sr_update: float) -> float:
+        # MultiTASC ignores SR reports; updates happen on its own window
+        return float(self.state["thresh"][device_id])
+
+    def on_window(self, active=None) -> None:
+        self.state = update(self.state, self._recent_batch, self.b_opt,
+                            self.cfg, active)

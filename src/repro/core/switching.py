@@ -1,0 +1,50 @@
+"""Server model switching (paper Sec. IV-E).
+
+Decision over the set of all device thresholds C (c_i^k, tier k):
+
+  S(C) = -1  switch to a *faster* model, if some tier has ALL of its
+             thresholds below c_lower (the controller is squeezing that
+             tier hard -> the server is too slow);
+         +1  switch to a *heavier* model, if EVERY device in EVERY tier
+             is above its tier's c_upper^k (thresholds are saturating ->
+             server headroom is going unused);
+          0  otherwise.
+
+Tier limits c_upper^k / c_lower come from offline examination of cascade
+results on a calibration set (repro.core.calibration).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_C_LOWER = 0.05
+DEFAULT_C_UPPER = {"low": 0.85, "mid": 0.80, "high": 0.75}
+
+
+def decide(thresholds, tier_ids, n_tiers, c_lower, c_upper_per_tier,
+           active=None):
+    """Vectorized S(C).
+
+    thresholds: (N,); tier_ids: (N,) int in [0, n_tiers);
+    c_upper_per_tier: (n_tiers,). Returns scalar int32 in {-1, 0, +1}.
+    """
+    thresholds = jnp.asarray(thresholds)
+    tier_ids = jnp.asarray(tier_ids)
+    if active is None:
+        active = jnp.ones(thresholds.shape, bool)
+
+    below = (thresholds < c_lower) | ~active
+    above = (thresholds > jnp.asarray(c_upper_per_tier)[tier_ids]) | ~active
+
+    oh = jax.nn.one_hot(tier_ids, n_tiers, dtype=jnp.float32)
+    tier_count = oh.sum(axis=0)
+    tier_active = (oh * active[:, None].astype(jnp.float32)).sum(axis=0)
+    tier_all_below = (oh * below[:, None]).sum(axis=0) >= tier_count
+    tier_nonempty = tier_active > 0
+
+    any_tier_all_below = jnp.any(tier_all_below & tier_nonempty)
+    all_above = jnp.all(above) & jnp.any(active)
+
+    return jnp.where(any_tier_all_below, -1,
+                     jnp.where(all_above, 1, 0)).astype(jnp.int32)

@@ -1,0 +1,89 @@
+"""Single-token decode attention Pallas TPU kernel (GQA over a ring cache).
+
+Serving hot loop: one query token per request attends over a KV cache of
+up to 32k (or a sliding window). Grid = (B, KV, W/BW) with the cache axis
+minormost; the per-(request, kv-head) query *group* (G = H/KV rows) stays
+resident in VMEM while cache tiles stream through. Slot validity (ring
+buffers that are not yet full) comes from a per-request length operand in
+SMEM-style (1,1) tiles. Output is the attended value per query head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BW = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                   scale):
+    wi = pl.program_id(2)
+    nw = pl.num_programs(2)
+    bw = k_ref.shape[1]
+
+    @pl.when(wi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (BW, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # (G, BW)
+    slot = wi * bw + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = slot < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, s.max(axis=1))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_s[...] = l_s[...] * corr + p.sum(axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + p @ v
+    m_s[...] = m_new
+
+    @pl.when(wi == nw - 1)
+    def _fin():
+        o_ref[0, 0, :, :] = (
+            acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, lengths, *, interpret=False):
+    """q: (B,H,hd); caches: (B,W,KV,hd); lengths: (B,) valid slot counts.
+
+    Returns (B,H,hd)."""
+    b, h, hd = q.shape
+    _, w, kvh, _ = k_cache.shape
+    g = h // kvh
+    bw = min(BW, w)
+    assert w % bw == 0
+    qg = q.reshape(b, kvh, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(b, kvh, w // bw),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, k_, w_: (b_,)),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, k_, w_: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, bw, 1, hd), lambda b_, k_, w_: (b_, w_, k_, 0)),
+            pl.BlockSpec((1, bw, 1, hd), lambda b_, k_, w_: (b_, w_, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, k_, w_: (b_, k_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,108 @@
+"""Flash attention (prefill/train) Pallas TPU kernel with GQA + windows.
+
+Grid = (B, H, Sq/BQ, Skv/BK) with the KV axis minormost so the online-
+softmax accumulators (m, l, acc) live in VMEM scratch across KV tiles.
+Causal/window skipping is done with pl.when on whole tiles — unlike the
+XLA chunked path (repro.models.attention.chunked_attention), masked-out
+tiles are *not* computed, halving causal FLOPs. GQA is expressed in the
+K/V BlockSpec index maps (kv head = h // group), so no KV replication is
+materialized. BQ/BK are multiples of the 128-lane MXU tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 256
+BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  causal, window, scale):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    bq, bk = q_ref.shape[1], k_ref.shape[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # tile-level skip: causal => only tiles with k_start <= q_end
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - window + 1) \
+            if causal else run
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (BQ, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (BK, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = (q @ k.T) * scale                           # (BQ, BK)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= kp <= qp
+        if window is not None:
+            ok &= (qp - kp) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_old = m_s[...]
+        m_new = jnp.maximum(m_old, s.max(axis=1))
+        corr = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_s[...] = l_s[...] * corr + p.sum(axis=1)
+        acc_s[...] = acc_s[...] * corr[:, None] + p @ v
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0, :, 0, :] = (
+            acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, interpret=False):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    bq, bk = min(BQ, s), min(BK, s)
+    assert s % bq == 0 and s % bk == 0
+    scale = 1.0 / (hd ** 0.5)
+    kern = functools.partial(_flash_kernel, causal=causal, window=window,
+                             scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b_, h_, q_, k_: (b_, q_, h_, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, q_, k_: (b_, k_, h_ // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b_, h_, q_, k_: (b_, k_, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b_, h_, q_, k_: (b_, q_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel
+body executes as traced jnp ops, validating the exact TPU code path. On a
+TPU backend the same calls compile through Mosaic. ``use_kernels(False)``
+(or the REPRO_NO_KERNELS env var) routes everything to the pure-jnp
+references instead — the dry-run lowering path uses that, since Mosaic
+kernels cannot lower for a CPU target.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.bvsb import bvsb as _bvsb
+from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+_STATE = {"enabled": os.environ.get("REPRO_NO_KERNELS", "") != "1"}
+
+
+def use_kernels(enabled: bool) -> None:
+    _STATE["enabled"] = enabled
+
+
+def kernels_enabled() -> bool:
+    return _STATE["enabled"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bvsb(logits):
+    if not kernels_enabled():
+        return _ref.bvsb_ref(logits)
+    return _bvsb(logits, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, window=None):
+    if not kernels_enabled():
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_interpret())
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    if not kernels_enabled():
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode_attn(q, k_cache, v_cache, lengths, interpret=_interpret())
+
+
+def rglru_scan(a, u, h0=None):
+    if not kernels_enabled():
+        return _ref.rglru_scan_ref(a, u, h0)
+    return _rglru(a, u, h0, interpret=_interpret())

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bvsb_ref(logits):
+    """Best-versus-Second-Best softmax margin (paper Eq. 2).
+
+    logits: (B, V) -> (bvsb (B,) fp32, top1 (B,) int32).
+    """
+    x = logits.astype(jnp.float32)
+    p = jax.nn.softmax(x, axis=-1)
+    top2, idx = jax.lax.top_k(p, 2)
+    return top2[:, 0] - top2[:, 1], idx[:, 0].astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). fp32 softmax."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = kpos <= qpos if causal else jnp.ones((s, s), bool)
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    scores = jnp.where(ok, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token decode attention over a (ring) KV cache.
+
+    q: (B,H,hd); caches: (B,W,KV,hd); lengths: (B,) number of valid slots
+    (slots [0, length) are valid). Returns (B,H,hd).
+    """
+    b, w, kvh, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bwkh->bkgw", qg,
+                        k_cache.astype(jnp.float32)) / jnp.sqrt(hd)
+    valid = jnp.arange(w)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgw,bwkh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, u, h0=None):
+    """h_t = a_t * h_{t-1} + u_t along axis 1. a/u: (B,S,D) fp32."""
+    if h0 is None:
+        h0 = jnp.zeros(a[:, 0, :].shape, jnp.float32)
+
+    def step(h, au):
+        at, ut = au
+        h = at * h + ut
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.swapaxes(0, 1).astype(jnp.float32),
+                          u.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,64 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel (chunked sequential scan).
+
+h_t = a_t * h_{t-1} + u_t — a diagonal linear recurrence. GPU
+implementations lean on warp-level scans; the TPU-native adaptation is a
+*chunked* scan: the grid tiles (batch, channel, sequence) with the
+sequence axis minormost, the running state h (one row of channels) stays
+resident in VMEM scratch across sequence tiles, and within a tile a short
+fori_loop steps through time while the VPU processes the full channel tile
+per step. Channel tiles are 128-lane aligned; sequence tiles amortize grid
+overhead. This keeps HBM traffic at exactly one read of (a, u) and one
+write of h — the recurrence is memory-bound, so that is the roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BD = 256   # channel lanes per tile
+BS = 128   # sequence steps per tile
+
+
+def _rglru_kernel(a_ref, u_ref, h0_ref, o_ref, h_s):
+    si = pl.program_id(2)
+    bs = a_ref.shape[1]
+
+    @pl.when(si == 0)
+    def _init():
+        h_s[...] = h0_ref[0, :].astype(jnp.float32)
+
+    def step(t, h):
+        h = a_ref[0, t, :].astype(jnp.float32) * h + \
+            u_ref[0, t, :].astype(jnp.float32)
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h_s[...] = jax.lax.fori_loop(0, bs, step, h_s[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, u, h0=None, *, interpret=False):
+    """a/u: (B,S,D); h0: (B,D) or None -> h: (B,S,D) fp32."""
+    b, s, d = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+    bd = min(BD, d)
+    bs = min(BS, s)
+    assert d % bd == 0 and s % bs == 0, (d, s)
+    return pl.pallas_call(
+        _rglru_kernel,
+        grid=(b, d // bd, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, bs, bd), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, bd), lambda b_, d_, s_: (b_, d_)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda b_, d_, s_: (b_, s_, d_)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), u.astype(jnp.float32), h0)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init). REPRO_DRYRUN_XLA_FLAGS overrides the device
+# count for reduced-size CI runs of this same driver.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape), on the single-pod 16x16 mesh and
+the 2x16x16 multi-pod mesh:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...) \
+            .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # raw (scan-undercounted)
+
+plus the scan-corrected HLO analysis (repro.roofline) whose per-device
+FLOPs/bytes/collective-bytes feed EXPERIMENTS.md §Roofline. Results are
+written as JSON under results/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.kernels import ops as kops
+from repro.launch import distributed, inputs, shardings
+from repro.launch.mesh import batch_axes_of, make_production_mesh, n_chips
+from repro.models.model import build_model
+from repro.roofline import analysis as ra
+from repro.roofline import hlo as rhlo
+from repro.training import optimizer as opt
+
+kops.use_kernels(False)  # Mosaic kernels cannot lower for a CPU target;
+# the XLA paths (chunked/windowed attention etc.) are the dry-run lowering.
+
+_SERVE_FSDP = False  # --serve-fsdp flips to the baseline serving sharding
+_ACCUM_OVERRIDE = 0  # --accum overrides the accumulation heuristic
+
+
+def _param_bytes(params_shape) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(params_shape))
+
+
+def _param_counts(params_shape, cfg):
+    """(n_total, n_active): exact counts from the instantiated tree;
+    active excludes the unrouted fraction of MoE expert weights."""
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down"):
+            expert += n
+    if cfg.is_moe and cfg.num_experts:
+        inactive = expert * (1.0 - cfg.num_experts_per_tok / cfg.num_experts)
+    else:
+        inactive = 0.0
+    return total, total - inactive
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, dtype=jnp.bfloat16,
+              param_sharding_override=None, verbose=True):
+    """Lower + compile one (arch, shape, mesh). Returns result dict."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = inputs.arch_for_shape(get_config(arch), shape)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    params_shape = inputs.params_specs(model, dtype)
+    p_sh = (param_sharding_override
+            or shardings.param_shardings(
+                mesh, params_shape,
+                fsdp=shape.kind == "train" or _SERVE_FSDP))
+    batch = inputs.batch_specs(cfg, shape)
+    b_sh = shardings.input_shardings(mesh, batch)
+
+    n_total, n_active = _param_counts(params_shape, cfg)
+    with mesh:
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_sh = shardings.opt_shardings(mesh, params_shape)
+            data_shards = n_chips(mesh) // mesh.shape["model"]
+            accum = _ACCUM_OVERRIDE or distributed.default_accum_steps(
+                n_total, shape.global_batch, data_shards)
+            step = distributed.make_train_step(model, mesh,
+                                               accum_steps=accum)
+            # donate params+opt: in-place update, no double residency
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            step = distributed.make_prefill_step(model, mesh)
+            cache_shape = inputs.cache_specs(model, cfg, shape)
+            c_sh = shardings.cache_shardings(mesh, cache_shape,
+                                             shape.global_batch)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, None, c_sh))
+            lowered = jitted.lower(params_shape, batch)
+        else:  # decode
+            tokens1, cache_shape, pos = inputs.decode_specs(model, cfg, shape)
+            c_sh = shardings.cache_shardings(mesh, cache_shape,
+                                             shape.global_batch)
+            t_sh = shardings.input_shardings(mesh, {"t": tokens1})["t"]
+            pos_sh = shardings.input_shardings(mesh, {"p": pos})["p"]
+            step = distributed.make_serve_step(model, mesh,
+                                               shape.global_batch)
+            # donate the KV cache: the ring update aliases in place
+            jitted = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh, pos_sh),
+                             out_shardings=(None, None, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_shape, tokens1, cache_shape, pos)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    stats = rhlo.analyze(compiled.as_text())
+    chips = n_chips(mesh)
+    pb_dev = _param_bytes(params_shape) / mesh.shape["model"]
+    roof = ra.compute_roofline(cfg, shape, stats, chips,
+                               param_bytes_per_device=pb_dev,
+                               n_active=n_active)
+    wall = time.time() - t0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": chips,
+        "ok": True,
+        "wall_s": round(wall, 1),
+        "memory_analysis": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        },
+        "cost_analysis_raw": {k: float(v) for k, v in (cost or {}).items()
+                              if k in ("flops", "bytes accessed")},
+        "hlo": {
+            "dot_flops_per_device": stats.dot_flops,
+            "dot_bytes_per_device": stats.dot_bytes,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collectives": stats.collectives,
+            "while_trip_counts": stats.while_trips,
+        },
+        "param_bytes_per_device": pb_dev,
+        "n_params": n_total,
+        "n_active_params": n_active,
+        "roofline": roof.as_dict(),
+    }
+    if verbose:
+        m = result["memory_analysis"]
+        print(f"[{arch} x {shape_name} @ {result['mesh']}] ok "
+              f"({wall:.0f}s) args={m['argument_bytes']/2**30:.2f}GiB "
+              f"temp={m['temp_bytes']/2**30:.2f}GiB "
+              f"compute={roof.compute_s*1e3:.2f}ms "
+              f"mem={roof.memory_s*1e3:.2f}ms "
+              f"coll={roof.collective_s*1e3:.2f}ms "
+              f"dominant={roof.dominant} useful={roof.useful_ratio:.2f}")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis(raw):", {k: v for k, v in
+                                        result["cost_analysis_raw"].items()})
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    # §Perf A/B toggles (baseline = --no-head-shard --serve-fsdp)
+    ap.add_argument("--no-head-shard", action="store_true",
+                    help="disable head-sharded attention (baseline)")
+    ap.add_argument("--serve-fsdp", action="store_true",
+                    help="keep FSDP weight sharding for serve shapes "
+                         "(baseline)")
+    ap.add_argument("--remat-save-coll", action="store_true",
+                    help="remat policy saves sublayer (post-collective) "
+                         "outputs instead of recomputing them")
+    ap.add_argument("--accum", type=int, default=0,
+                    help="override gradient-accumulation depth")
+    args = ap.parse_args()
+
+    if args.accum:
+        global _ACCUM_OVERRIDE
+        _ACCUM_OVERRIDE = args.accum
+
+    if args.remat_save_coll:
+        from repro.models import transformer as _tr
+        _tr.REMAT_SAVE_COLLECTIVE_OUTPUTS = True
+
+    if args.no_head_shard:
+        from repro.models import attention as _attn
+        _attn.HEAD_SHARDED_ATTENTION = False
+    if args.serve_fsdp:
+        global _SERVE_FSDP
+        _SERVE_FSDP = True
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for mesh in meshes:
+        mesh_tag = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}_{shape_name}_{mesh_tag}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    res = lower_one(arch, shape_name, mesh)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_tag, "ok": False, "error": str(e)}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation.
+
+For decode shapes the spec includes the KV cache / recurrent state at the
+full context length (the brief: ONE new token with a cache of seq_len).
+Dense full-attention archs running long_500k use their sliding-window
+variant (window 4096) — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ArchConfig, InputShape
+
+LONG_WINDOW = 4096  # sliding-window variant for dense archs at 500k
+
+
+def arch_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Apply per-shape config adjustments (windowed long-context variant)."""
+    if shape.name == "long_500k" and cfg.sliding_window is None \
+            and cfg.layer_pattern is None and not cfg.is_encoder_decoder:
+        cfg = cfg.with_(sliding_window=LONG_WINDOW)
+    if shape.name == "long_500k" and cfg.is_encoder_decoder:
+        cfg = cfg.with_(sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Train/prefill batch as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    out: Dict[str, Any] = {}
+    s_text = s
+    if cfg.family == "vlm":
+        v = min(cfg.vision_tokens, s // 2)
+        s_text = s - v
+        out["vision_embeds"] = jax.ShapeDtypeStruct((b, v, cfg.d_model), f32)
+    if cfg.is_encoder_decoder:
+        out["audio_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.audio_frames, cfg.d_model), f32)
+    out["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    return out
+
+
+def cache_specs(model, cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Any:
+    """Decode cache as ShapeDtypeStructs (eval_shape over init_cache)."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def build():
+        return model.init_cache(None, b, s, dtype)
+
+    return jax.eval_shape(build)
+
+
+def decode_specs(model, cfg: ArchConfig, shape: InputShape) -> tuple:
+    """(tokens1, cache, pos) ShapeDtypeStructs for serve_step."""
+    b = shape.global_batch
+    tokens1 = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return tokens1, cache_specs(model, cfg, shape), pos
+
+
+def params_specs(model, dtype=jnp.float32) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0), dtype))

@@ -1,0 +1,28 @@
+"""Production mesh definition (TPU v5e).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes_of(mesh) -> tuple:
+    """Mesh axes the batch dim is sharded over."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

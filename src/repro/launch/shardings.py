@@ -1,0 +1,190 @@
+"""Sharding rules: params, optimizer state, inputs, KV caches.
+
+Strategy (single- and multi-pod):
+  * "model" axis = tensor parallelism: projection output features, expert
+    dim, vocab dim of embeddings/head, KV-cache *sequence* dim (decode
+    context parallelism — softmax over a sharded axis costs only (B,H)
+    psums, while sharding KV heads is impossible for kv_heads < 16).
+  * "data" (+ "pod") axes = batch sharding AND fully-sharded (FSDP/ZeRO)
+    param+optimizer storage: the non-TP dim of every matrix is sharded
+    over the batch axes when divisible, so fp32 Adam moments of a 32B
+    model cost ~1 GiB/chip instead of 16 GiB/chip. XLA inserts the
+    per-layer all-gathers inside the layer scan.
+  * batch=1 shapes (long_500k) replicate the batch dim.
+
+Rules are name/shape-based over the param pytree paths — one place to
+hillclimb (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import batch_axes_of
+from repro.models.common import MeshContext
+
+MODEL = "model"
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_spec(path, leaf, *, fsdp_axes: Tuple[str, ...] = (),
+               fsdp_size: int = 1, model_size: int = 16) -> P:
+    """PartitionSpec for one parameter leaf."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    fa = fsdp_axes if fsdp_axes else None
+
+    def lead(spec_tail: tuple) -> P:
+        pad = nd - len(spec_tail)
+        return P(*((None,) * pad + tuple(spec_tail)))
+
+    def fsdp_ok(dim_size: int):
+        return fa if fsdp_size > 1 and dim_size % fsdp_size == 0 else None
+
+    if "table" in name:                       # embeddings / lm head (V, d)
+        return P(MODEL, fsdp_ok(shape[1]))
+    if "shared" in names:                     # shared experts: dense TP
+        if name in ("w_gate", "w_up") and nd >= 2:
+            return lead((fsdp_ok(shape[-2]), MODEL))
+        if name == "w_down" and nd >= 2:
+            return lead((MODEL, fsdp_ok(shape[-1])))
+        return P()
+    if name in ("w_gate", "w_up", "w_down") and nd >= 3 and "moe" in names:
+        return lead((MODEL, fsdp_ok(shape[-2]), None))  # expert dim TP
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_ff1",
+                "w_rnn") and nd >= 2:
+        if shape[-1] % model_size == 0:
+            return lead((fsdp_ok(shape[-2]), MODEL))
+        return lead((fsdp_ok(shape[-2]), None))
+    if name in ("wo", "w_down", "w_ff2", "w_out") and nd >= 2:
+        if shape[-2] % model_size == 0:
+            return lead((MODEL, fsdp_ok(shape[-1])))
+        return lead((None, fsdp_ok(shape[-1])))
+    if name in ("w_a", "w_x") and nd >= 3:    # block-diagonal RG-LRU gates
+        return lead((MODEL, None, None))
+    if name == "r" and nd >= 3:               # sLSTM per-head recurrent
+        return lead((None, None, None))
+    if name == "router":
+        return lead((None, None))
+    return P()                                 # norms, biases, scalars
+
+
+def _fsdp_info(mesh):
+    ba = batch_axes_of(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    return ba, size
+
+
+def param_shardings(mesh, params_shape, *, fsdp: bool = True) -> Any:
+    """fsdp=True (training): non-TP matrix dims sharded over batch axes
+    (ZeRO-3). fsdp=False (serving): weights TP-only — resident, no
+    per-layer weight all-gathers on the decode critical path (§Perf)."""
+    ba, size = _fsdp_info(mesh) if fsdp else ((), 1)
+    msize = mesh.shape[MODEL]
+
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, fsdp_axes=ba,
+                                              fsdp_size=size,
+                                              model_size=msize))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(mesh, params_shape) -> Any:
+    ps = param_shardings(mesh, params_shape)
+    return {
+        "mu": ps,
+        "nu": ps,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_spec(mesh, global_batch: int) -> P:
+    ba = batch_axes_of(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    return P(ba) if global_batch % n == 0 and global_batch >= n else P()
+
+
+def input_shardings(mesh, batch_shape_tree) -> Any:
+    """Shard dim 0 (batch) over data axes when divisible."""
+    def one(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        spec = batch_spec(mesh, b)
+        return NamedSharding(mesh, P(*(tuple(spec) + (None,) * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def cache_shardings(mesh, cache_shape_tree, global_batch: int) -> Any:
+    """KV caches: (..., B, W, KV, hd) -> batch over data axes, seq (W) over
+    model; recurrent states: batch only (+ feature over model when the
+    trailing dim divides)."""
+    axes = batch_axes_of(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    ba = axes if (global_batch % n == 0 and global_batch >= n) else None
+    msize = mesh.shape[MODEL]
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        nd = leaf.ndim
+        # KV ring caches: names end with k/v, shape (L?, B, W, KV, hd)
+        if names and names[-1] in ("k", "v") and nd >= 4:
+            spec = [None] * nd
+            spec[nd - 4] = ba if ba else None      # batch
+            spec[nd - 3] = (MODEL if shape[nd - 3] % msize == 0
+                            else None)             # seq (context parallel)
+            return NamedSharding(mesh, P(*spec))
+        # cross-attention KV tuples (B, F, KV, hd) under "cross"
+        if "cross" in names and nd >= 4:
+            spec = [None] * nd
+            spec[nd - 4] = ba if ba else None
+            return NamedSharding(mesh, P(*spec))
+        # mLSTM matrix memory (L?, B, H, p, p)
+        if names and names[-1] == "C" and nd >= 4:
+            spec = [None] * nd
+            spec[nd - 4] = ba if ba else None
+            spec[nd - 2] = MODEL if shape[nd - 2] % msize == 0 else None
+            return NamedSharding(mesh, P(*spec))
+        # rglru hidden state (L?, B, dr) / conv tail (L?, B, 3, dr)
+        if names and names[-1] in ("h", "conv_tail", "n", "c", "m") and nd >= 2:
+            spec = [None] * nd
+            for i, d in enumerate(shape):
+                if d == global_batch:
+                    spec[i] = ba if ba else None
+                    break
+            if shape[-1] % msize == 0 and names[-1] in ("h", "conv_tail"):
+                spec[-1] = MODEL
+            return NamedSharding(mesh, P(*spec))
+        spec = [None] * nd
+        if nd >= 2:
+            for i, d in enumerate(shape):
+                if d == global_batch:
+                    spec[i] = ba if ba else None
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape_tree)
+
+
+def make_mesh_context(mesh) -> MeshContext:
+    return MeshContext(batch_axes=batch_axes_of(mesh), model_axis=MODEL,
+                       mesh=mesh)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

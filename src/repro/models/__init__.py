@@ -1,0 +1,9 @@
+"""Model zoo: build any assigned architecture from its config.
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    model = build_model(get_config("qwen3-32b"))
+"""
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

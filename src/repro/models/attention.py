@@ -1,0 +1,356 @@
+"""Attention: GQA/MQA self-attention, cross-attention, and cached decode.
+
+Three full-sequence execution paths (chosen by shape, all numerically
+equivalent — tests assert this):
+  * dense      — one masked einsum, used for short sequences;
+  * windowed   — sliding-window attention where each query block attends a
+                 statically-sized KV slice selected with lax.dynamic_slice
+                 (exact FLOPs, used for local-attention layers & long context);
+  * chunked    — double lax.scan (query blocks x KV blocks) with online
+                 softmax, bounded memory for long full-attention prefill.
+
+On real TPUs the Pallas kernels in repro.kernels replace the chunked path;
+the XLA paths here are also the lowering used by the CPU-backend dry run.
+
+Decode uses a ring-buffer KV cache of size min(max_seq, window) with
+per-request positions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import KeyGen, dense_init
+
+NEG_INF = -1e30
+
+Q_BLOCK = 512
+KV_BLOCK = 1024
+DENSE_MAX = 1024  # dense path only when S_kv <= this: at 4k+ the full
+                  # (B,H,S,S) score tensor would dominate HBM (17 GiB at
+                  # B_loc=16, S=4096 fp32); the chunked path is O(S·blk)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def attn_init(rng: KeyGen, cfg, dtype, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": dense_init(rng(), (d, h * hd), cfg.init_scale, dtype),
+        "wk": dense_init(rng(), (d, kv * hd), cfg.init_scale, dtype),
+        "wv": dense_init(rng(), (d, kv * hd), cfg.init_scale, dtype),
+        "wo": dense_init(rng(), (h * hd, d), cfg.init_scale, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _qkv(params, xq, xkv, cfg):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(xq @ params["wq"], h, hd)
+    k = _split_heads(xkv @ params["wk"], kv, hd)
+    v = _split_heads(xkv @ params["wv"], kv, hd)
+    if "q_norm" in params:
+        q = common.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = common.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# core attention paths (B, S, H, hd) x (B, T, KV, hd)
+# ---------------------------------------------------------------------------
+def _gqa_scores(q, k, scale):
+    """q: (B,Sq,H,hd) k: (B,Sk,KV,hd) -> scores (B,KV,G,Sq,Sk) fp32."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+
+
+def _gqa_out(probs, v, dtype):
+    """probs: (B,KV,G,Sq,Sk) v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    b, kvh, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, kvh * g, -1).astype(dtype)
+
+
+def _mask_bias(q_pos, k_pos, causal, window):
+    """q_pos: (Sq,), k_pos: (Sk,) -> additive bias (Sq, Sk) fp32."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dq - dk < window
+    ok &= dk >= 0  # negative positions mark invalid (padding) slots
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dense_attention(q, k, v, *, causal, window, q_offset=0, k_offset=0,
+                    soft_cap=None):
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = _gqa_scores(q, k, scale)
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    qp = q_offset + jnp.arange(q.shape[1])
+    kp = k_offset + jnp.arange(k.shape[1])
+    s = s + _mask_bias(qp, kp, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v, q.dtype)
+
+
+def windowed_attention(q, k, v, *, window, soft_cap=None):
+    """Causal sliding-window attention with exact FLOPs.
+
+    For each query block the KV slice [q_start - window, q_end) is selected
+    with a static size via lax.dynamic_slice — no masked-out block compute.
+    """
+    b, s, h, hd = q.shape
+    qb = min(Q_BLOCK, s)
+    n_blocks = s // qb
+    assert s % qb == 0, (s, qb)
+    span = window + qb  # static KV slice length per query block
+
+    if span >= s:
+        return dense_attention(q, k, v, causal=True, window=window)
+
+    def per_block(i):
+        q_start = i * qb
+        k_start = jnp.maximum(q_start + qb - span, 0)
+        qi = jax.lax.dynamic_slice_in_dim(q, q_start, qb, axis=1)
+        ki = jax.lax.dynamic_slice_in_dim(k, k_start, span, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, k_start, span, axis=1)
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+        sc = _gqa_scores(qi, ki, scale)
+        if soft_cap:
+            sc = jnp.tanh(sc / soft_cap) * soft_cap
+        qp = q_start + jnp.arange(qb)
+        kp = k_start + jnp.arange(span)
+        sc = sc + _mask_bias(qp, kp, True, window)
+        return _gqa_out(jax.nn.softmax(sc, axis=-1), vi, q.dtype)
+
+    outs = jax.lax.map(per_block, jnp.arange(n_blocks))  # (n, B, qb, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+def chunked_attention(q, k, v, *, causal, window=None, soft_cap=None):
+    """Online-softmax attention, scanning KV blocks per query block.
+
+    Memory-bounded equivalent of flash attention in pure XLA ops. Masked-out
+    blocks are still computed (static shapes); the Pallas kernel and the
+    windowed path avoid that waste on TPU.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    qb, kb = min(Q_BLOCK, s), min(KV_BLOCK, t)
+    assert s % qb == 0 and t % kb == 0, (s, t)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kvh = k.shape[2]
+    g = h // kvh
+
+    def q_block(qi):
+        q_start = qi * qb
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, qb, axis=1)
+        qg = qc.reshape(b, qb, kvh, g, hd).astype(jnp.float32)
+        qp = q_start + jnp.arange(qb)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            k_start = ki * kb
+            kc = jax.lax.dynamic_slice_in_dim(k, k_start, kb, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_start, kb, axis=1)
+            sc = jnp.einsum("bskgh,btkh->bkgst", qg,
+                            kc.astype(jnp.float32)) * scale
+            if soft_cap:
+                sc = jnp.tanh(sc / soft_cap) * soft_cap
+            kp = k_start + jnp.arange(kb)
+            sc = sc + _mask_bias(qp, kp, causal, window)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgst,btkh->bkgsh", p, vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(t // kb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b,kv,g,qb,hd) -> (b,qb,h,hd)
+        return jnp.moveaxis(out, 3, 1).reshape(b, qb, h, hd).astype(q.dtype)
+
+    outs = jax.lax.map(q_block, jnp.arange(s // qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+def attention_core(q, k, v, *, causal=True, window=None, soft_cap=None):
+    s, t = q.shape[1], k.shape[1]
+    if t <= DENSE_MAX:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               soft_cap=soft_cap)
+    if window is not None and causal and s == t:
+        return windowed_attention(q, k, v, window=window, soft_cap=soft_cap)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             soft_cap=soft_cap)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence self-attention (train / prefill)
+# ---------------------------------------------------------------------------
+# §Perf optimization (see EXPERIMENTS.md): under a mesh, repeat KV heads to
+# MHA and pad the head count to a multiple of the model axis, then constrain
+# q/k/v to a head-sharded layout. Attention becomes fully shard-local: one
+# KV reshard per layer instead of an all-gather per (layer x KV block)
+# (GQA kv_heads < model axis is otherwise unshardable — qwen3 kv=8,
+# qwen2-vl 28 query heads). Set False to reproduce the paper-faithful
+# baseline numbers.
+HEAD_SHARDED_ATTENTION = True
+
+
+def _head_shard(q, k, v, mctx):
+    """Returns (q, k, v, original_h). No-op without a mesh."""
+    if mctx is None or mctx.mesh is None or not HEAD_SHARDED_ATTENTION:
+        return q, k, v, q.shape[2]
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    ms = mctx.model_size
+    h, kvh = q.shape[2], k.shape[2]
+    g = h // kvh
+    hp = -(-h // ms) * ms
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if hp != h:
+        pad = [(0, 0), (0, 0), (0, hp - h), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    ns = NamedSharding(mctx.mesh, P(mctx.batch_axes or None, None,
+                                    "model", None))
+    q = jax.lax.with_sharding_constraint(q, ns)
+    k = jax.lax.with_sharding_constraint(k, ns)
+    v = jax.lax.with_sharding_constraint(v, ns)
+    return q, k, v, h
+
+
+def self_attention(params, x, positions, cfg, *, window=None, pos3=None,
+                   mctx=None):
+    """x: (B,S,d); positions: (B,S) int32; pos3: (3,B,S) for M-RoPE.
+
+    Returns (out (B,S,d), (k, v)) — k/v pre-rope-applied, for cache fill.
+    """
+    q, k, v = _qkv(params, x, x, cfg)
+    if pos3 is not None and cfg.mrope_sections:
+        q = common.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = common.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    kv_out = (k, v)
+    qs, ks, vs, h = _head_shard(q, k, v, mctx)
+    out = attention_core(qs, ks, vs, causal=True, window=window,
+                         soft_cap=cfg.logit_soft_cap)
+    out = out[:, :, :h]
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ params["wo"], kv_out
+
+
+def cross_attention(params, x, enc_kv, cfg):
+    """Decoder cross-attention. enc_kv: (k, v) each (B,T,KV,hd)."""
+    q, _, _ = _qkv(params, x, x, cfg)  # k/v projections unused here
+    k, v = enc_kv
+    out = attention_core(q, k, v, causal=False)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def encode_kv(params, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = _split_heads(enc_out @ params["wk"], kv, hd)
+    v = _split_heads(enc_out @ params["wv"], kv, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+def init_kv_cache(batch, cache_len, cfg, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+    }
+
+
+def fill_kv_cache(cache, k, v, start=0):
+    """Write prefill K/V into the cache (assumes seq fits the cache)."""
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), start, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), start, axis=1),
+    }
+
+
+def attn_decode(params, x1, cache, pos, cfg, *, window=None, pos3=None):
+    """Single-token decode step.
+
+    x1: (B,1,d); cache: ring buffer (B,W,KV,hd); pos: (B,) absolute position
+    of the NEW token. Returns (out (B,1,d), new_cache).
+    """
+    b = x1.shape[0]
+    w = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(params, x1, x1, cfg)
+    if pos3 is not None and cfg.mrope_sections:
+        q = common.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k_new = common.apply_mrope(k_new, pos3, cfg.rope_theta,
+                                   cfg.mrope_sections)
+    else:
+        q = common.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = common.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    slot = (pos % w).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    # absolute position of each ring slot j given head position `pos`:
+    #   abs_j = pos - ((slot - j) mod W); valid iff abs_j >= 0 (and the
+    #   window constraint pos - abs_j < W holds by construction).
+    j = jnp.arange(w)[None, :]
+    abs_pos = pos[:, None] - jnp.mod(slot[:, None] - j, w)
+    valid = abs_pos >= 0
+    if window is not None:
+        valid &= (pos[:, None] - abs_pos) < window
+
+    scale = 1.0 / jnp.sqrt(cfg.resolved_head_dim).astype(jnp.float32)
+    sc = _gqa_scores(q, ck, scale)  # (B,KV,G,1,W)
+    if cfg.logit_soft_cap:
+        sc = jnp.tanh(sc / cfg.logit_soft_cap) * cfg.logit_soft_cap
+    sc = jnp.where(valid[:, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = _gqa_out(p, cv, x1.dtype)  # (B,1,H,hd)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def cross_attn_decode(params, x1, enc_kv, cfg):
+    q, _, _ = _qkv(params, x1, x1, cfg)
+    k, v = enc_kv
+    out = dense_attention(q, k, v, causal=False, window=None)
+    b = x1.shape[0]
+    return out.reshape(b, 1, -1) @ params["wo"]

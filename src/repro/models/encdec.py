@@ -1,0 +1,179 @@
+"""Encoder-decoder transformer (SeamlessM4T text decoder + speech encoder
+backbone, arXiv:2308.11596).
+
+Per the task brief the modality frontend (mel-spectrogram + conv codec) is a
+stub: the encoder consumes precomputed frame embeddings (B, F, d) from
+``input_specs``. Everything downstream — speech-encoder transformer stack,
+cross-attention, causal text decoder with KV caching — is fully implemented.
+
+Both stacks are lax.scan'd over stacked per-layer params. Cross-attention
+K/V are computed once from the encoder output and carried in the decode
+cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common
+from repro.models.common import KeyGen
+
+
+def _enc_layer_init(kg, cfg, dtype):
+    return {
+        "norm1": common.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(kg, cfg, dtype),
+        "norm2": common.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": common.mlp_init(kg, cfg.d_model, cfg.d_ff, cfg.init_scale, dtype),
+    }
+
+
+def _dec_layer_init(kg, cfg, dtype):
+    p = _enc_layer_init(kg, cfg, dtype)
+    p["normx"] = common.rmsnorm_init(cfg.d_model, dtype)
+    p["xattn"] = attn.attn_init(kg, cfg, dtype, cross=True)
+    return p
+
+
+def init_params(cfg, rng, dtype=jnp.float32):
+    kg = KeyGen(rng)
+    d = cfg.d_model
+
+    def stack(make, n, salt):
+        layers = []
+        for i in range(n):
+            kgl = KeyGen(jax.random.fold_in(rng, salt + i))
+            layers.append(make(kgl, cfg, dtype))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    return {
+        "frontend_proj": common.dense_init(kg(), (d, d), cfg.init_scale, dtype),
+        "embed": common.embed_init(kg, cfg.vocab_size, d, cfg.init_scale, dtype),
+        "enc_blocks": stack(_enc_layer_init, cfg.encoder_layers, 2000),
+        "enc_norm": common.rmsnorm_init(d, dtype),
+        "dec_blocks": stack(_dec_layer_init, cfg.num_layers, 3000),
+        "final_norm": common.rmsnorm_init(d, dtype),
+        "lm_head": common.embed_init(kg, cfg.vocab_size, d, cfg.init_scale, dtype),
+    }
+
+
+def encode(params, cfg, audio_embeds):
+    """audio_embeds: (B, F, d) stub-frontend output -> (B, F, d)."""
+    x = audio_embeds @ params["frontend_proj"]
+    b, f, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(f), (b, f))
+
+    def layer(x, lp):
+        h = common.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        x = x + _enc_self_attention(lp, h, positions, cfg)
+        h2 = common.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + common.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["enc_blocks"])
+    return common.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _enc_self_attention(lp, x, positions, cfg):
+    """Bidirectional self-attention for the encoder."""
+    q, k, v = attn._qkv(lp["attn"], x, x, cfg)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    out = attn.attention_core(q, k, v, causal=False)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ lp["attn"]["wo"]
+
+
+def forward(params, cfg, tokens, audio_embeds, mctx=common.LOCAL, *,
+            collect_cache=False, cache_len=None, remat=False,
+            return_hidden=False):
+    """Teacher-forced seq2seq forward. tokens: (B, S_dec).
+
+    Returns (logits, cache, aux=0). Cache = dict(self=..., cross=...).
+    """
+    enc_out = encode(params, cfg, audio_embeds)
+    x = common.embed_apply(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache_len = cache_len or s
+
+    def layer(x, lp):
+        h = common.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        out, (k, v) = attn.self_attention(lp["attn"], h, positions, cfg,
+                                          window=cfg.sliding_window,
+                                          mctx=mctx)
+        x = x + out
+        hx = common.rmsnorm(lp["normx"], x, cfg.norm_eps)
+        enc_kv = attn.encode_kv(lp["xattn"], enc_out, cfg)
+        x = x + attn.cross_attention(lp["xattn"], hx, enc_kv, cfg)
+        h2 = common.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + common.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
+        entry = ()
+        if collect_cache:
+            w = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            c = attn.init_kv_cache(b, w, cfg, x.dtype)
+            c = attn.fill_kv_cache(c, k[:, -w:], v[:, -w:])
+            entry = {"self": c, "cross": enc_kv}
+        return x, entry
+
+    if remat:
+        layer = jax.checkpoint(layer,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(layer, x, params["dec_blocks"])
+    x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    cache = caches if collect_cache else None
+    if return_hidden:
+        return x, cache, jnp.zeros((), jnp.float32)
+    logits = common.lm_head_apply(params["lm_head"], x, cfg.vocab_size)
+    return logits, cache, jnp.zeros((), jnp.float32)
+
+
+def init_cache(params, cfg, batch, cache_len, enc_frames, dtype=jnp.bfloat16):
+    """Empty decode cache: per-layer self KV ring + cross KV."""
+    w = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    one = {
+        "self": attn.init_kv_cache(batch, w, cfg, dtype),
+        "cross": (jnp.zeros((batch, enc_frames, kv, hd), dtype),
+                  jnp.zeros((batch, enc_frames, kv, hd), dtype)),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+
+
+def prefill_cross(params, cfg, audio_embeds, cache):
+    """Run the encoder and fill the cross-KV part of the cache."""
+    enc_out = encode(params, cfg, audio_embeds)
+
+    def per_layer(lp):
+        return attn.encode_kv(lp["xattn"], enc_out, cfg)
+
+    cross = jax.vmap(per_layer, in_axes=({"xattn": 0},))(
+        {"xattn": params["dec_blocks"]["xattn"]})
+    return {"self": cache["self"], "cross": cross}
+
+
+def decode_step(params, cfg, tokens1, cache, pos, mctx=common.LOCAL, *,
+                return_hidden=False):
+    """tokens1: (B,1); cache from init_cache (cross already filled)."""
+    x = common.embed_apply(params["embed"], tokens1)
+
+    def layer(x, inp):
+        lp, c = inp
+        h = common.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        out, new_self = attn.attn_decode(lp["attn"], h, c["self"], pos, cfg,
+                                         window=cfg.sliding_window)
+        x = x + out
+        hx = common.rmsnorm(lp["normx"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_decode(lp["xattn"], hx, c["cross"], cfg)
+        h2 = common.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + common.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
+        return x, {"self": new_self, "cross": c["cross"]}
+
+    x, new_cache = jax.lax.scan(layer, x, (params["dec_blocks"], cache))
+    x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, new_cache
+    logits = common.lm_head_apply(params["lm_head"], x, cfg.vocab_size)
+    return logits, new_cache

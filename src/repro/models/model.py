@@ -1,0 +1,113 @@
+"""Unified model API over all architecture families.
+
+    model = build_model(cfg)
+    params = model.init(rng, dtype)
+    logits, cache, aux = model.forward(params, batch, mctx, ...)
+    loss, metrics = model.loss(params, batch, mctx)
+    cache = model.init_cache(params, batch_size, cache_len, dtype)
+    logits, cache = model.decode_step(params, tokens1, cache, pos, mctx)
+
+``batch`` is a dict with keys depending on the family:
+  decoder families: {"tokens": (B,S) [, "labels": (B,S)]}
+  vlm:              + {"vision_embeds": (B,V,d)}
+  audio (enc-dec):  + {"audio_embeds": (B,F,d)}
+Labels use -100 as the ignore index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, encdec, transformer
+from repro.models.common import MeshContext
+
+IGNORE = -100
+
+
+def cross_entropy(logits, labels, vocab_size):
+    """Mean CE over non-ignored positions. logits may be vocab-padded."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    forward: Callable          # (params, batch, mctx, **kw) -> (logits, cache, aux)
+    init_cache: Callable
+    decode_step: Callable
+
+    def loss(self, params, batch, mctx=common.LOCAL, *, remat=False):
+        labels = batch.get("labels")
+        if labels is None:
+            tokens = batch["tokens"]
+            labels = jnp.concatenate(
+                [tokens[:, 1:], jnp.full_like(tokens[:, :1], IGNORE)], axis=1)
+        logits, _, aux = self.forward(params, batch, mctx, remat=remat)
+        # decoder-side logits only (vlm prepends vision tokens)
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, -labels.shape[1]:]
+        ce = cross_entropy(logits, labels, self.cfg.vocab_size)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+
+def build_model(cfg) -> Model:
+    if cfg.is_encoder_decoder:
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+def _build_decoder(cfg) -> Model:
+    def init(rng, dtype=jnp.float32):
+        return transformer.init_params(cfg, rng, dtype)
+
+    def forward(params, batch, mctx=common.LOCAL, *, collect_cache=False,
+                cache_len=None, remat=False, return_hidden=False):
+        return transformer.forward(
+            params, cfg, batch["tokens"], mctx,
+            vision_embeds=batch.get("vision_embeds"),
+            collect_cache=collect_cache, cache_len=cache_len, remat=remat,
+            return_hidden=return_hidden)
+
+    def init_cache(params, batch_size, cache_len, dtype=jnp.bfloat16):
+        return transformer.init_cache(params, cfg, batch_size, cache_len, dtype)
+
+    def decode_step(params, tokens1, cache, pos, mctx=common.LOCAL, *,
+                    return_hidden=False):
+        return transformer.decode_step(params, cfg, tokens1, cache, pos,
+                                       mctx, return_hidden=return_hidden)
+
+    return Model(cfg, init, forward, init_cache, decode_step)
+
+
+def _build_encdec(cfg) -> Model:
+    def init(rng, dtype=jnp.float32):
+        return encdec.init_params(cfg, rng, dtype)
+
+    def forward(params, batch, mctx=common.LOCAL, *, collect_cache=False,
+                cache_len=None, remat=False, return_hidden=False):
+        return encdec.forward(params, cfg, batch["tokens"],
+                              batch["audio_embeds"], mctx,
+                              collect_cache=collect_cache,
+                              cache_len=cache_len, remat=remat,
+                              return_hidden=return_hidden)
+
+    def init_cache(params, batch_size, cache_len, dtype=jnp.bfloat16):
+        return encdec.init_cache(params, cfg, batch_size, cache_len,
+                                 cfg.audio_frames, dtype)
+
+    def decode_step(params, tokens1, cache, pos, mctx=common.LOCAL, *,
+                    return_hidden=False):
+        return encdec.decode_step(params, cfg, tokens1, cache, pos, mctx,
+                                  return_hidden=return_hidden)
+
+    return Model(cfg, init, forward, init_cache, decode_step)

@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (per the paper): pre-norm x -> two branches
+  gate branch: GeLU(W_gate x)
+  rnn branch : causal depthwise conv (width 4) -> RG-LRU
+out = W_out (gate * rnn)
+
+RG-LRU cell:
+  r_t = sigmoid(W_a x_t)                    recurrence gate
+  i_t = sigmoid(W_x x_t)                    input gate
+  a_t = exp(-c * softplus(lam) * r_t)       c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Full-sequence path uses jax.lax.associative_scan (log-depth, fully counted
+by HLO cost analysis); decode is a single fused step carrying
+(h, conv tail) state. The Pallas kernel (repro.kernels.rglru_scan) is the
+TPU-optimized chunked variant of the same recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dense_init
+
+RG_LRU_C = 8.0
+CONV_WIDTH = 4
+GATE_BLOCKS = 16  # block-diagonal gate heads (Griffin's per-head gates);
+                  # 16 blocks align with the production model axis so gate
+                  # matmuls are shard-local
+
+
+def rglru_init(rng: KeyGen, cfg, dtype):
+    d = cfg.d_model
+    dr = d  # recurrence width
+    nb = GATE_BLOCKS if dr % GATE_BLOCKS == 0 else 1
+    bs = dr // nb
+    return {
+        "w_gate": dense_init(rng(), (d, dr), cfg.init_scale, dtype),
+        "w_rnn": dense_init(rng(), (d, dr), cfg.init_scale, dtype),
+        "conv_w": dense_init(rng(), (CONV_WIDTH, dr), cfg.init_scale, dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        # block-diagonal gate projections (nb, bs, bs)
+        "w_a": dense_init(rng(), (nb, bs, bs), cfg.init_scale, dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_x": dense_init(rng(), (nb, bs, bs), cfg.init_scale, dtype),
+        "b_x": jnp.zeros((dr,), dtype),
+        # lam init so that a ~ U(0.9, 0.999) at r=1 (paper's init range)
+        "lam": jnp.full((dr,), 0.65, jnp.float32),
+        "w_out": dense_init(rng(), (dr, d), cfg.init_scale, dtype),
+    }
+
+
+def _block_proj(x, w):
+    """x: (..., dr) @ block-diagonal w (nb, bs, bs) -> (..., dr)."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bs))
+    yb = jnp.einsum("...nk,nkj->...nj", xb, w)
+    return yb.reshape(x.shape)
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv, width 4. x: (B,S,dr); tail: (B,3,dr) or None."""
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+3, dr)
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * w[CONV_WIDTH - 1 - i]
+        for i in range(CONV_WIDTH)
+    )
+    new_tail = xp[:, -(CONV_WIDTH - 1):, :]
+    return out + b, new_tail
+
+
+def _gates(params, xr):
+    xr32 = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_proj(xr32, params["w_a"].astype(jnp.float32))
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_proj(xr32, params["w_x"].astype(jnp.float32))
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * (i * xr.astype(jnp.float32))
+    return a, u
+
+
+def rglru_scan_ref(a, u, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + u_t over axis 1 (fp32)."""
+    if h0 is not None:
+        u = u.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def rglru_block(params, x, state=None, *, use_kernel=False):
+    """x: (B,S,d). state: None or dict(h (B,dr), conv_tail (B,3,dr)).
+
+    Returns (out (B,S,d), new_state).
+    """
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    xr = x @ params["w_rnn"]
+    tail = state["conv_tail"] if state is not None else None
+    xr, new_tail = _causal_conv(xr, params["conv_w"], params["conv_b"], tail)
+    a, u = _gates(params, xr)
+    h0 = state["h"] if state is not None else None
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, u, h0)
+    else:
+        h = rglru_scan_ref(a, u, h0)
+    out = (gate.astype(jnp.float32) * h).astype(x.dtype) @ params["w_out"]
+    new_state = {"h": h[:, -1, :], "conv_tail": new_tail}
+    return out, new_state
+
+
+def rglru_decode(params, x1, state):
+    """Single-step decode. x1: (B,1,d); state as above."""
+    gate = jax.nn.gelu(x1 @ params["w_gate"])
+    xr = x1 @ params["w_rnn"]
+    xr, new_tail = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                state["conv_tail"])
+    a, u = _gates(params, xr)  # (B,1,dr)
+    h = a[:, 0] * state["h"] + u[:, 0]
+    out = (gate[:, 0].astype(jnp.float32) * h).astype(x1.dtype) @ params["w_out"]
+    return out[:, None, :], {"h": h, "conv_tail": new_tail}
+
+
+def rglru_init_state(batch, d, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv_tail": jnp.zeros((batch, CONV_WIDTH - 1, d), dtype),
+    }

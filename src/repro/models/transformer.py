@@ -1,0 +1,385 @@
+"""Decoder stack covering dense / MoE / hybrid / SSM / VLM families.
+
+Layers are grouped by the config's repeating ``pattern`` (e.g. recurrentgemma
+= ("rglru","rglru","lattn")) into *super-blocks*; the stack is a
+``lax.scan`` over stacked super-block params (compile-time O(1) in depth),
+with an unrolled prefix (e.g. DeepSeekMoE's first dense layer) and an
+unrolled remainder when depth % pattern != 0.
+
+Layer kinds: "attn" (global self-attention), "lattn" (local sliding-window
+self-attention), "rglru", "mlstm", "slstm". MoE configs replace the dense
+MLP of attn layers with the expert-parallel MoE of models/moe.py.
+
+Caches/recurrent state mirror the params structure ({"prefix", "blocks",
+"tail"}), so decode is a scan over (params, cache) pairs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, moe, recurrent, xlstm
+from repro.models.common import KeyGen, MeshContext
+
+# §Perf: when True, the layer-scan remat policy SAVES sublayer outputs
+# (the tensors just produced by TP all-reduces) instead of recomputing
+# them in the backward pass — trades ~170 MB/layer/microbatch of HBM for
+# skipping the forward collectives during recompute. Toggled by the
+# dry-run --remat-save-coll flag; measured in EXPERIMENTS.md §Perf.
+REMAT_SAVE_COLLECTIVE_OUTPUTS = False
+_SAVED_NAMES = ("attn_out", "mlp_out")
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+def _layer_init(rng: KeyGen, cfg, kind: str, dtype, layer_idx: int):
+    d = cfg.d_model
+    p = {"norm1": common.rmsnorm_init(d, dtype)}
+    if kind in ("attn", "lattn"):
+        p["attn"] = attn.attn_init(rng, cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"] = recurrent.rglru_init(rng, cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(rng, cfg, dtype)
+        return p  # self-contained
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(rng, cfg, dtype)
+        return p
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff or cfg.is_moe:
+        p["norm2"] = common.rmsnorm_init(d, dtype)
+        use_moe = cfg.is_moe and layer_idx >= cfg.first_dense_layers
+        if use_moe:
+            p["moe"] = moe.moe_init(rng, cfg, dtype)
+        else:
+            p["mlp"] = common.mlp_init(rng, cfg.d_model, cfg.d_ff,
+                                       cfg.init_scale, dtype)
+    return p
+
+
+def init_params(cfg, rng, dtype=jnp.float32):
+    kg = KeyGen(rng)
+    pattern = cfg.pattern
+    plen = len(set_pattern_unit(cfg))
+    n_prefix = cfg.first_dense_layers
+    body = pattern[n_prefix:]
+    n_sb = len(body) // plen
+    tail_start = n_prefix + n_sb * plen
+
+    params = {
+        "embed": common.embed_init(kg, cfg.vocab_size, cfg.d_model,
+                                   cfg.init_scale, dtype),
+        "final_norm": common.rmsnorm_init(cfg.d_model, dtype),
+        "prefix": [
+            _layer_init(kg, cfg, pattern[i], dtype, i) for i in range(n_prefix)
+        ],
+        "tail": [
+            _layer_init(kg, cfg, pattern[i], dtype, i)
+            for i in range(tail_start, cfg.num_layers)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.embed_init(
+            kg, cfg.vocab_size, cfg.d_model, cfg.init_scale, dtype)
+
+    # stacked super-blocks
+    def one_sb(sb_idx):
+        kgl = KeyGen(jax.random.fold_in(rng, 1000 + sb_idx))
+        return tuple(
+            _layer_init(kgl, cfg, body[k], dtype, n_prefix + sb_idx * plen + k)
+            for k in range(plen)
+        )
+
+    if n_sb > 0:
+        sbs = [one_sb(i) for i in range(n_sb)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *sbs)
+    else:
+        params["blocks"] = None
+    return params
+
+
+def set_pattern_unit(cfg):
+    return tuple(cfg.layer_pattern) if cfg.layer_pattern else ("attn",)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence layer apply (train / prefill)
+# ---------------------------------------------------------------------------
+def _layer_fwd(lp, x, kind, cfg, mctx, positions, pos3, *, collect_cache,
+               cache_len):
+    """Returns (x, cache_entry, aux)."""
+    h = common.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    cache = ()
+    if kind in ("attn", "lattn"):
+        window = _window_for(cfg, kind)
+        out, (k, v) = attn.self_attention(lp["attn"], h, positions, cfg,
+                                          window=window, pos3=pos3,
+                                          mctx=mctx)
+        out = jax.ad_checkpoint.checkpoint_name(out, "attn_out")
+        x = x + out
+        if collect_cache:
+            w = _cache_len_for(cfg, kind, cache_len)
+            c = attn.init_kv_cache(x.shape[0], w, cfg, x.dtype)
+            s = k.shape[1]
+            if w >= s:
+                c = attn.fill_kv_cache(c, k, v)
+            else:  # keep last w positions (ring consistent: slot = pos % w)
+                sl = lambda t: jax.lax.dynamic_slice_in_dim(t, s - w, w, 1)
+                kk, vv = sl(k), sl(v)
+                roll = (s - w) % w
+                kk = jnp.roll(kk, roll, axis=1)
+                vv = jnp.roll(vv, roll, axis=1)
+                c = attn.fill_kv_cache(c, kk, vv)
+            cache = c
+    elif kind == "rglru":
+        out, st = recurrent.rglru_block(lp["rglru"], h)
+        x = x + out
+        if collect_cache:
+            cache = st
+    elif kind == "mlstm":
+        out, st = xlstm.mlstm_block(lp["mlstm"], h, cfg)
+        if collect_cache:
+            cache = st
+        return x + out, cache, aux
+    elif kind == "slstm":
+        out, st = xlstm.slstm_block(lp["slstm"], h, cfg)
+        if collect_cache:
+            cache = st
+        return x + out, cache, aux
+    # MLP / MoE sub-layer
+    if "norm2" in lp:
+        h2 = common.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+        if "moe" in lp:
+            out2, aux = moe.moe_apply(lp["moe"], h2, cfg, mctx, act=act,
+                                      return_aux=True)
+        else:
+            out2 = common.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
+        out2 = jax.ad_checkpoint.checkpoint_name(out2, "mlp_out")
+        x = x + out2
+    return x, cache, aux
+
+
+def _window_for(cfg, kind):
+    if kind == "lattn":
+        return cfg.local_attn_window
+    return cfg.sliding_window  # None for full attention
+
+
+def _cache_len_for(cfg, kind, cache_len):
+    w = _window_for(cfg, kind)
+    return min(cache_len, w) if w else cache_len
+
+
+def forward(params, cfg, tokens, mctx: MeshContext = common.LOCAL, *,
+            vision_embeds=None, collect_cache=False, cache_len=None,
+            remat=False, return_hidden=False):
+    """tokens: (B, S_text). With vision_embeds (B,V,d): sequence is
+    [vision | text]. Returns (logits, cache_or_None, aux_loss)."""
+    x = common.embed_apply(params["embed"], tokens)
+    b = x.shape[0]
+    pos3 = None
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        pos3 = vlm_positions(b, vision_embeds.shape[1], tokens.shape[1])
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache_len = cache_len or s
+    pattern = cfg.pattern
+    plen = len(set_pattern_unit(cfg))
+    n_prefix = cfg.first_dense_layers
+    body = pattern[n_prefix:]
+    n_sb = len(body) // plen
+
+    kw = dict(collect_cache=collect_cache, cache_len=cache_len)
+    aux_total = jnp.zeros((), jnp.float32)
+    prefix_caches, tail_caches = [], []
+
+    for i, lp in enumerate(params["prefix"]):
+        x, c, aux = _layer_fwd(lp, x, pattern[i], cfg, mctx, positions, pos3, **kw)
+        prefix_caches.append(c)
+        aux_total += aux
+
+    if params["blocks"] is not None:
+        def sb_fwd(x, sb_params):
+            caches, aux_sb = [], jnp.zeros((), jnp.float32)
+            for k2 in range(plen):
+                x, c, aux = _layer_fwd(sb_params[k2], x, body[k2], cfg, mctx,
+                                       positions, pos3, **kw)
+                caches.append(c)
+                aux_sb += aux
+            return x, (tuple(caches), aux_sb)
+
+        if remat:
+            policy = (jax.checkpoint_policies.save_only_these_names(
+                          *_SAVED_NAMES)
+                      if REMAT_SAVE_COLLECTIVE_OUTPUTS
+                      else jax.checkpoint_policies.nothing_saveable)
+            sb_fwd = jax.checkpoint(sb_fwd, policy=policy)
+
+        x, (block_caches, aux_sb) = jax.lax.scan(sb_fwd, x, params["blocks"])
+        aux_total += aux_sb.sum()
+    else:
+        block_caches = None
+
+    tail_start = n_prefix + n_sb * plen
+    for j, lp in enumerate(params["tail"]):
+        x, c, aux = _layer_fwd(lp, x, pattern[tail_start + j], cfg, mctx,
+                               positions, pos3, **kw)
+        tail_caches.append(c)
+        aux_total += aux
+
+    x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    cache = None
+    if collect_cache:
+        cache = {"prefix": prefix_caches, "blocks": block_caches,
+                 "tail": tail_caches}
+    if return_hidden:
+        return x, cache, aux_total
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = common.lm_head_apply(head, x, cfg.vocab_size)
+    return logits, cache, aux_total
+
+
+def vlm_positions(b, v, s_text):
+    """M-RoPE position ids (3, B, V+S_text): vision grid then text."""
+    g = max(int(v ** 0.5), 1)
+    idx = jnp.arange(v)
+    vt = jnp.zeros((v,), jnp.int32)
+    vh = (idx // g).astype(jnp.int32)
+    vw = (idx % g).astype(jnp.int32)
+    t0 = g  # text starts after the max grid coordinate
+    tix = t0 + jnp.arange(s_text, dtype=jnp.int32)
+    pos = jnp.stack([
+        jnp.concatenate([vt, tix]),
+        jnp.concatenate([vh, tix]),
+        jnp.concatenate([vw, tix]),
+    ])  # (3, V+S)
+    return jnp.broadcast_to(pos[:, None, :], (3, b, v + s_text))
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+def init_cache(params, cfg, batch, cache_len, dtype=jnp.bfloat16):
+    """Build an empty cache matching the params structure."""
+    pattern = cfg.pattern
+    plen = len(set_pattern_unit(cfg))
+    n_prefix = cfg.first_dense_layers
+    body = pattern[n_prefix:]
+    n_sb = len(body) // plen
+    d = cfg.d_model
+
+    def entry(kind):
+        if kind in ("attn", "lattn"):
+            return attn.init_kv_cache(batch, _cache_len_for(cfg, kind, cache_len),
+                                      cfg, dtype)
+        if kind == "rglru":
+            return recurrent.rglru_init_state(batch, d, dtype)
+        if kind == "mlstm":
+            return xlstm.mlstm_init_state(batch, cfg.num_heads,
+                                          d // cfg.num_heads)
+        if kind == "slstm":
+            return xlstm.slstm_init_state(batch, d, cfg.slstm_num_heads)
+        raise ValueError(kind)
+
+    blocks = None
+    if n_sb > 0:
+        one = tuple(entry(body[k]) for k in range(plen))
+        blocks = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_sb,) + x.shape).copy(), one)
+    tail_start = n_prefix + n_sb * plen
+    return {
+        "prefix": [entry(pattern[i]) for i in range(n_prefix)],
+        "blocks": blocks,
+        "tail": [entry(pattern[i]) for i in range(tail_start, cfg.num_layers)],
+    }
+
+
+def _layer_decode(lp, x1, cache, kind, cfg, mctx, pos, pos3):
+    if kind in ("attn", "lattn"):
+        h = common.rmsnorm(lp["norm1"], x1, cfg.norm_eps)
+        out, new_c = attn.attn_decode(lp["attn"], h, cache, pos, cfg,
+                                      window=_window_for(cfg, kind), pos3=pos3)
+        x1 = x1 + out
+    elif kind == "rglru":
+        h = common.rmsnorm(lp["norm1"], x1, cfg.norm_eps)
+        out, new_c = recurrent.rglru_decode(lp["rglru"], h, cache)
+        x1 = x1 + out
+    elif kind == "mlstm":
+        h = common.rmsnorm(lp["norm1"], x1, cfg.norm_eps)
+        out, new_c = xlstm.mlstm_block_decode(lp["mlstm"], h, cfg, cache)
+        return x1 + out, new_c
+    elif kind == "slstm":
+        h = common.rmsnorm(lp["norm1"], x1, cfg.norm_eps)
+        out, new_c = xlstm.slstm_block_decode(lp["slstm"], h, cfg, cache)
+        return x1 + out, new_c
+    else:
+        raise ValueError(kind)
+    if "norm2" in lp:
+        h2 = common.rmsnorm(lp["norm2"], x1, cfg.norm_eps)
+        act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+        if "moe" in lp:
+            out2 = moe.moe_apply(lp["moe"], h2, cfg, mctx, act=act)
+        else:
+            out2 = common.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
+        x1 = x1 + out2
+    return x1, new_c
+
+
+def decode_step(params, cfg, tokens1, cache, pos,
+                mctx: MeshContext = common.LOCAL, *, return_hidden=False):
+    """tokens1: (B,1) int32; pos: (B,) absolute positions. Returns
+    (logits (B,1,V) — or final hidden states — and new_cache)."""
+    x = common.embed_apply(params["embed"], tokens1)
+    pos3 = None
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(pos[None, :, None], (3,) + pos[:, None].shape)
+    pattern = cfg.pattern
+    plen = len(set_pattern_unit(cfg))
+    n_prefix = cfg.first_dense_layers
+    body = pattern[n_prefix:]
+    n_sb = len(body) // plen
+
+    new_prefix, new_tail = [], []
+    for i, lp in enumerate(params["prefix"]):
+        x, c = _layer_decode(lp, x, cache["prefix"][i], pattern[i], cfg, mctx,
+                             pos, pos3)
+        new_prefix.append(c)
+
+    new_blocks = None
+    if params["blocks"] is not None:
+        def sb_dec(x, inp):
+            sb_params, sb_cache = inp
+            new_cs = []
+            for k2 in range(plen):
+                x, c = _layer_decode(sb_params[k2], x, sb_cache[k2], body[k2],
+                                     cfg, mctx, pos, pos3)
+                new_cs.append(c)
+            return x, tuple(new_cs)
+
+        x, new_blocks = jax.lax.scan(sb_dec, x,
+                                     (params["blocks"], cache["blocks"]))
+
+    tail_start = n_prefix + n_sb * plen
+    for j, lp in enumerate(params["tail"]):
+        x, c = _layer_decode(lp, x, cache["tail"][j], pattern[tail_start + j],
+                             cfg, mctx, pos, pos3)
+        new_tail.append(c)
+
+    x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = {"prefix": new_prefix, "blocks": new_blocks,
+                 "tail": new_tail}
+    if return_hidden:
+        return x, new_cache
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = common.lm_head_apply(head, x, cfg.vocab_size)
+    return logits, new_cache

@@ -1,0 +1,233 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential).
+
+mLSTM cell (per head, head dim p):
+  i_t = exp(li_t)   li clamped to [-8, 8]
+  f_t = sigmoid-gated decay, lf = log f <= 0
+  C_t = f_t C_{t-1} + i_t k_t (x) v_t        n_t = f_t n_{t-1} + i_t k_t
+  h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+
+Full-sequence execution is **chunkwise-parallel** (chunk = 128): intra-chunk
+terms are dense matmuls (exact HLO FLOPs), inter-chunk state is carried by a
+short lax.scan. Numerical note: the pairwise log-weight
+  logw(t, j) = bsum_t - bsum_j + li_j   (j <= t, bsum = cumsum(lf))
+is computed *directly* — since lf <= 0, bsum_t - bsum_j <= 0 and
+logw <= li_j <= 8, so exp() never overflows in fp32; the h output is
+normalized by max(|q.n|, 1). This replaces the paper's running-max
+stabilizer with hard gate clamps (documented in DESIGN.md).
+
+sLSTM keeps exponential-gated scalar state with block-diagonal recurrent
+weights and *is* max-stabilized (m state); it is inherently sequential ->
+lax.scan over time. Decode for both cells is O(1) state.
+
+Block wiring (350M config, d_ff=0 -> blocks are self-contained):
+  mLSTM block: up-proj 2x (cell | gate) -> conv-less cell -> headwise
+               groupnorm -> * silu(gate) -> down-proj
+  sLSTM block: cell (4 gates, W x + R h) -> groupnorm -> GeLU FFN (4/3)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dense_init, groupnorm
+
+CHUNK = 128
+GATE_CLAMP = 8.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(rng: KeyGen, cfg, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    du = 2 * d
+    return {
+        # up-proj: [cell input (2d) | output gate (d)]
+        "w_up": dense_init(rng(), (d, du + d), cfg.init_scale, dtype),
+        "wq": dense_init(rng(), (du, d), cfg.init_scale, dtype),
+        "wk": dense_init(rng(), (du, d), cfg.init_scale, dtype),
+        "wv": dense_init(rng(), (du, d), cfg.init_scale, dtype),
+        "w_if": dense_init(rng(), (du, 2 * h), cfg.init_scale, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]),
+        "w_down": dense_init(rng(), (d, d), cfg.init_scale, dtype),
+    }
+
+
+def _mlstm_qkvg(params, x, nh):
+    b, s, d = x.shape
+    p = d // nh
+    u = x @ params["w_up"]
+    xc, z = u[..., :2 * d], u[..., 2 * d:]    # cell input (2d), output gate (d)
+    q = (xc @ params["wq"]).reshape(b, s, nh, p)
+    k = (xc @ params["wk"]).reshape(b, s, nh, p) / jnp.sqrt(p).astype(x.dtype)
+    v = (xc @ params["wv"]).reshape(b, s, nh, p)
+    gl = xc.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    log_i = jnp.clip(gl[..., :nh], -GATE_CLAMP, GATE_CLAMP)       # (B,S,H)
+    log_f = jax.nn.log_sigmoid(jnp.clip(gl[..., nh:], -GATE_CLAMP, GATE_CLAMP))
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_parallel(q, k, v, log_i, log_f, state=None):
+    """Chunkwise mLSTM. q/k/v: (B,S,H,p); gates (B,S,H) fp32.
+
+    state: None or dict(C (B,H,p,p), n (B,H,p)) fp32.
+    Returns (h (B,S,H,p) fp32, new_state).
+    """
+    b, s, nh, p = q.shape
+    c = min(CHUNK, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    rs = lambda t: t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
+    xs = (rs(q).astype(jnp.float32), rs(k).astype(jnp.float32),
+          rs(v).astype(jnp.float32), rs(log_i), rs(log_f))
+
+    if state is None:
+        state = mlstm_init_state(b, nh, p)
+    causal = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+
+    def chunk_step(carry, inp):
+        C, n = carry                          # (B,H,p,p), (B,H,p)
+        qi, ki, vi, li, lf = inp
+        bsum = jnp.cumsum(lf, axis=1)         # (B,c,H)
+        # intra-chunk
+        logw = bsum[:, :, None, :] - bsum[:, None, :, :] + li[:, None, :, :]
+        w = jnp.where(causal, jnp.exp(logw), 0.0)          # (B,t,j,H)
+        scores = jnp.einsum("bthp,bjhp->btjh", qi, ki) * w
+        num = jnp.einsum("btjh,bjhq->bthq", scores, vi)
+        den = scores.sum(axis=2)                            # (B,c,H)
+        # inter-chunk
+        wt = jnp.exp(bsum)                                  # (B,c,H) <= 1
+        num = num + jnp.einsum("bthp,bhpq->bthq", qi * wt[..., None], C)
+        den = den + jnp.einsum("bthp,bhp->bth", qi * wt[..., None], n)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update
+        wj = jnp.exp(bsum[:, -1:, :] - bsum + li)           # (B,c,H) <= e^8
+        decay = jnp.exp(bsum[:, -1, :])                     # (B,H)
+        C_new = C * decay[:, :, None, None] + jnp.einsum(
+            "bjh,bjhp,bjhq->bhpq", wj, ki, vi)
+        n_new = n * decay[:, :, None] + jnp.einsum("bjh,bjhp->bhp", wj, ki)
+        return (C_new, n_new), h
+
+    (C, n), hs = jax.lax.scan(chunk_step, (state["C"], state["n"]), xs)
+    h = hs.swapaxes(0, 1).reshape(b, s, nh, p)
+    return h, {"C": C, "n": n}
+
+
+def mlstm_decode_cell(q1, k1, v1, li, lf, state):
+    """One step. q1/k1/v1: (B,H,p); li/lf: (B,H). Returns (h, state)."""
+    C, n = state["C"], state["n"]
+    f = jnp.exp(lf)[:, :, None, None]
+    i = jnp.exp(li)[:, :, None, None]
+    q1 = q1.astype(jnp.float32)
+    k1 = k1.astype(jnp.float32)
+    v1 = v1.astype(jnp.float32)
+    C_new = C * f + i * jnp.einsum("bhp,bhq->bhpq", k1, v1)
+    n_new = n * f[..., 0] + i[..., 0] * k1
+    num = jnp.einsum("bhp,bhpq->bhq", q1, C_new)
+    den = jnp.einsum("bhp,bhp->bh", q1, n_new)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return h, {"C": C_new, "n": n_new}
+
+
+def mlstm_init_state(batch, nh, p):
+    return {"C": jnp.zeros((batch, nh, p, p), jnp.float32),
+            "n": jnp.zeros((batch, nh, p), jnp.float32)}
+
+
+def mlstm_block(params, x, cfg, state=None):
+    """x: (B,S,d) -> (out, state). Full-sequence (train/prefill)."""
+    nh = cfg.num_heads
+    q, k, v, li, lf, z = _mlstm_qkvg(params, x, nh)
+    h, new_state = mlstm_parallel(q, k, v, li, lf, state)
+    h = groupnorm(h, nh).reshape(x.shape[0], x.shape[1], -1)
+    out = (h.astype(x.dtype) * jax.nn.silu(z)) @ params["w_down"]
+    return out, new_state
+
+
+def mlstm_block_decode(params, x1, cfg, state):
+    nh = cfg.num_heads
+    q, k, v, li, lf, z = _mlstm_qkvg(params, x1, nh)
+    h, new_state = mlstm_decode_cell(q[:, 0], k[:, 0], v[:, 0],
+                                     li[:, 0], lf[:, 0], state)
+    h = groupnorm(h, nh).reshape(x1.shape[0], 1, -1)
+    out = (h.astype(x1.dtype) * jax.nn.silu(z)) @ params["w_down"]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(rng: KeyGen, cfg, dtype):
+    d, h = cfg.d_model, cfg.slstm_num_heads
+    p = d // h
+    f_ff = ((4 * d // 3) + 127) // 128 * 128
+    return {
+        "w_in": dense_init(rng(), (d, 4 * d), cfg.init_scale, dtype),
+        "b_in": jnp.zeros((4 * d,), jnp.float32),
+        # block-diagonal recurrent weights, per head: (H, p, 4p)
+        "r": dense_init(rng(), (h, p, 4 * p), cfg.init_scale, jnp.float32),
+        "w_ff1": dense_init(rng(), (d, f_ff), cfg.init_scale, dtype),
+        "w_ff2": dense_init(rng(), (f_ff, d), cfg.init_scale, dtype),
+    }
+
+
+def _slstm_step(params, xw_t, st, nh):
+    """xw_t: (B,4d) precomputed input projection; st: state dict."""
+    b = xw_t.shape[0]
+    d = xw_t.shape[1] // 4
+    p = d // nh
+    hprev = st["h"].reshape(b, nh, p)
+    rec = jnp.einsum("bhp,hpq->bhq", hprev, params["r"]).reshape(b, 4 * d)
+    g = (xw_t + rec).reshape(b, nh, p, 4)
+    z = jnp.tanh(g[..., 0])
+    li = jnp.clip(g[..., 1], -GATE_CLAMP, GATE_CLAMP)
+    lf = jax.nn.log_sigmoid(jnp.clip(g[..., 2], -GATE_CLAMP, GATE_CLAMP))
+    o = jax.nn.sigmoid(g[..., 3])
+    m_new = jnp.maximum(lf + st["m"], li)
+    i = jnp.exp(li - m_new)
+    f = jnp.exp(lf + st["m"] - m_new)
+    c_new = f * st["c"] + i * z
+    n_new = f * st["n"] + i
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return {"h": h_new.reshape(b, d), "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_init_state(batch, d, nh):
+    p = d // nh
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, nh, p), jnp.float32),
+        "n": jnp.zeros((batch, nh, p), jnp.float32),
+        "m": jnp.full((batch, nh, p), -GATE_CLAMP, jnp.float32),
+    }
+
+
+def slstm_block(params, x, cfg, state=None):
+    """x: (B,S,d). Sequential scan over time."""
+    b, s, d = x.shape
+    nh = cfg.slstm_num_heads
+    if state is None:
+        state = slstm_init_state(b, d, nh)
+    xw = x.astype(jnp.float32) @ params["w_in"].astype(jnp.float32) + params["b_in"]
+
+    def step(st, xw_t):
+        st = _slstm_step(params, xw_t, st, nh)
+        return st, st["h"]
+
+    new_state, hs = jax.lax.scan(step, state, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                       # (B,S,d)
+    h = groupnorm(h.reshape(b, s, nh, -1), nh).reshape(b, s, d).astype(x.dtype)
+    out = jax.nn.gelu(h @ params["w_ff1"]) @ params["w_ff2"]
+    return out, new_state
+
+
+def slstm_block_decode(params, x1, cfg, state):
+    b, _, d = x1.shape
+    nh = cfg.slstm_num_heads
+    xw = x1[:, 0].astype(jnp.float32) @ params["w_in"].astype(jnp.float32) + params["b_in"]
+    new_state = _slstm_step(params, xw, state, nh)
+    h = new_state["h"].reshape(b, 1, nh, -1)
+    h = groupnorm(h, nh).reshape(b, 1, d).astype(x1.dtype)
+    out = jax.nn.gelu(h @ params["w_ff1"]) @ params["w_ff2"]
+    return out, new_state

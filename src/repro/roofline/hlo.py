@@ -1,0 +1,238 @@
+"""HLO text analysis: scan-corrected FLOPs, bytes, and collective traffic.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (trip counts are not
+statically modeled), so ``compiled.cost_analysis()`` under-counts every
+``lax.scan`` — including our scan-over-layers — by the trip count. This
+module parses ``compiled.as_text()`` (post-SPMD, per-device shapes and
+real collectives) and walks the call graph from ENTRY, multiplying
+instruction costs by the enclosing while loops' trip counts (recovered
+from the integer bound constant in each loop's condition computation).
+
+Counted:
+  * dot/dot-general FLOPs: 2 * prod(output shape) * prod(lhs contracting
+    dims) — exact for all matmuls (the dominant compute);
+  * dot operand/output bytes — a lower bound on HBM traffic used for the
+    memory roofline term (weights + major activations), plus reported
+    parameter bytes from memory_analysis;
+  * collective bytes by opcode (all-reduce, all-gather, reduce-scatter,
+    all-to-all, collective-permute), max(input, output) per op.
+
+All numbers are PER DEVICE (post-SPMD partitioning).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_CALLED = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]  # instr name -> type string
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HEADER.match(stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), stripped)
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.type_str
+        else:
+            # parameter lines etc: still record shapes when possible
+            pm = re.match(r"\s*%([\w\.\-]+)\s*=\s*"
+                          r"((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\]"
+                          r"(?:\{[^}]*\})?))\s*parameter", line)
+            if pm:
+                cur.shapes[pm.group(1)] = pm.group(2)
+    comps["__entry__"] = comps[entry] if entry else None
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the loop condition computation."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_INT.finditer(ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _operands(line: str) -> List[str]:
+    """Top-level operand names of an instruction line."""
+    start = line.index("(")
+    depth = 0
+    out, cur = [], ""
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                if cur.strip():
+                    out.append(cur.strip())
+                break
+        if depth >= 1:
+            if ch == "," and depth == 1:
+                out.append(cur.strip())
+                cur = ""
+            else:
+                cur += ch
+    return [o.lstrip("%") for o in out if o.startswith("%")]
+
+
+def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
+    out_dims = _shape_dims(ins.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contracting size from lhs shape + lhs_contracting_dims
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    ops = _operands(ins.line)
+    k = 1
+    if mdims and ops:
+        lhs_type = comp.shapes.get(ops[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        for idx in (mdims.group(1).split(",") if mdims.group(1) else []):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    flops = 2.0 * out_elems * k
+    byts = _shape_bytes(ins.type_str)
+    for o in ops[:2]:
+        byts += _shape_bytes(comp.shapes.get(o, ""))
+    return flops, byts
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+
+def analyze(hlo_text: str) -> HloStats:
+    comps = parse_computations(hlo_text)
+    entry = comps.get("__entry__")
+    stats = HloStats()
+    if entry is None:
+        return stats
+    seen_stack = set()
+
+    def walk(comp: Computation, mult: float):
+        if comp.name in seen_stack:   # defensive: no recursion
+            return
+        seen_stack.add(comp.name)
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "dot-general"):
+                f, b = _dot_flops_bytes(ins, comp)
+                stats.dot_flops += f * mult
+                stats.dot_bytes += b * mult
+            elif any(ins.opcode.startswith(c) for c in COLLECTIVES):
+                out_b = _shape_bytes(ins.type_str)
+                in_b = sum(_shape_bytes(comp.shapes.get(o, ""))
+                           for o in _operands(ins.line))
+                byts = max(out_b, in_b) * mult
+                key = ins.opcode
+                stats.collectives[key] = stats.collectives.get(key, 0.0) + byts
+                stats.collective_bytes += byts
+                stats.collective_count += 1
+            if ins.opcode == "while":
+                mcond = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                mbody = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mcfg = _TRIP_CFG.search(ins.line)
+                if mcfg:  # XLA-annotated trip count (authoritative)
+                    trips = int(mcfg.group(1))
+                elif mcond and mcond.group(1) in comps:
+                    trips = _trip_count(comps[mcond.group(1)])
+                else:
+                    trips = 1
+                stats.while_trips.append(trips)
+                if mbody and mbody.group(1) in comps:
+                    walk(comps[mbody.group(1)], mult * trips)
+            elif ins.opcode in ("fusion", "call", "conditional",
+                                "async-start"):
+                for m in _CALLED.finditer(ins.line):
+                    sub = m.group(1)
+                    if sub in comps and sub != comp.name:
+                        walk(comps[sub], mult)
+        seen_stack.discard(comp.name)
+
+    walk(entry, 1.0)
+    return stats

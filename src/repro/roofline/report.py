@@ -1,0 +1,85 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+results/dryrun/*.json artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(out_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(rows, mesh: str) -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "6·N·D FLOPs | useful | HBM GiB/chip (args+temp) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        mem = r["memory_analysis"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {rf['model_flops']:.2e} | "
+            f"{rf['useful_ratio']:.2f} | {hbm:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | ok | params | bytes/chip (args) | "
+           "collective GiB/chip | top collective |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAIL: {r.get('error','')[:60]} | | | | |")
+            continue
+        colls = r["hlo"]["collectives"]
+        top = max(colls, key=colls.get) if colls else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['n_params']/1e9:.2f}B | "
+            f"{r['memory_analysis']['argument_bytes']/2**30:.2f} | "
+            f"{r['hlo']['collective_bytes_per_device']/2**30:.2f} | "
+            f"{top} |")
+    return "\n".join(out)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(out_dir)
+    meshes = sorted({r.get("mesh") for r in rows if r.get("mesh")})
+    print("## §Dry-run\n")
+    print(dryrun_table(rows))
+    for mesh in meshes:
+        if mesh.startswith("2x"):
+            continue  # roofline table is single-pod per the brief
+        print(f"\n## §Roofline (mesh {mesh}, per-chip terms; v5e: "
+              "197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+        print(roofline_table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Live cascade serving: queue, dynamic batching, engine, clients."""
+from repro.serving.cascade import CascadeResult, run_cascade
+from repro.serving.client import DeviceClient
+from repro.serving.engine import ServedModel, ServerEngine
+from repro.serving.queue import Request, RequestQueue
+
+__all__ = ["run_cascade", "CascadeResult", "DeviceClient", "ServerEngine",
+           "ServedModel", "Request", "RequestQueue"]

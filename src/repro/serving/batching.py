@@ -1,0 +1,38 @@
+"""Dynamic batching (paper Sec. V-A) adapted to XLA static shapes.
+
+The paper draws "the maximum batch size feasible with the current request
+queue length" from the ladder B = {1,2,4,8,16,32,64}, capped per model at
+its diminishing-returns point. On TPU, dynamic shapes are not free: we
+compile one executable per ladder bucket and pad the drawn batch up to the
+bucket — exactly how production TPU serving realizes dynamic batching.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cascade_tiers import BATCH_LADDER
+
+
+def pick_bucket(queue_len: int, max_batch: int,
+                ladder: Sequence[int] = BATCH_LADDER) -> int:
+    """Largest ladder batch <= min(queue_len, max_batch); 0 if queue empty."""
+    if queue_len <= 0:
+        return 0
+    b = 1
+    for x in ladder:
+        if x <= min(queue_len, max_batch):
+            b = x
+    return b
+
+
+def pad_batch(samples: list, bucket: int):
+    """Stack samples and pad with the last sample to the bucket size.
+
+    Returns (batch array, valid count)."""
+    n = len(samples)
+    assert 0 < n <= bucket
+    arrs = list(samples) + [samples[-1]] * (bucket - n)
+    return jnp.stack(arrs), n

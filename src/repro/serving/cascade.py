@@ -1,0 +1,151 @@
+"""End-to-end live cascade orchestrator.
+
+Wires N DeviceClients (real light-model logits), the ServerEngine (real
+heavy-model logits, dynamic batching, model switching) and a scheduler
+(MultiTASC++/MultiTASC/Static) into the closed loop of Fig. 2/3, driven by
+a deterministic virtual clock (event heap). This is the live-model
+counterpart of repro.sim.events: same queueing semantics, but confidences
+come from actual forward passes instead of the calibrated synthetic model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import switching
+from repro.core.multitasc import MultiTASC
+from repro.serving.client import DeviceClient
+from repro.serving.engine import Request, ServerEngine
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    sr: float
+    accuracy: float
+    throughput: float
+    forwarded_frac: float
+    per_device_sr: np.ndarray
+    timeline: Dict[str, list]
+    switches: int
+
+
+def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
+                scheduler, datasets, labels=None, *, window: float = 1.5,
+                model_switching: bool = False, tier_ids=None,
+                c_upper=None, max_time: float = 3600.0) -> CascadeResult:
+    """datasets: per-device list of (S,) token arrays (one per sample).
+
+    labels: optional per-device list of int labels — when given, accuracy
+    is measured against them; otherwise agreement-with-heavy is reported.
+    """
+    n = len(clients)
+    tier_ids = np.zeros(n, np.int32) if tier_ids is None else np.asarray(tier_ids)
+    n_tiers = int(tier_ids.max()) + 1
+    if c_upper is None:
+        c_upper = np.full(n_tiers, 0.8)
+
+    heap, seq = [], 0
+
+    def push(t, kind, payload=None):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, payload))
+        seq += 1
+
+    for c in clients:
+        push(c.profile.latency, "dev", c.device_id)
+    push(window, "window", None)
+
+    cursor = np.zeros(n, int)
+    met = np.zeros(n, int)
+    total = np.zeros(n, int)
+    correct = np.zeros(n, int)
+    fwd_count = 0
+    server_busy = False
+    switches = 0
+    last_t = 0.0
+    timeline = {"t": [], "thresholds": [], "model": []}
+
+    def complete(i, latency, pred, label):
+        nonlocal last_t
+        clients[i].record_completion(latency)
+        met[i] += latency <= clients[i].slo
+        total[i] += 1
+        if label is not None:
+            correct[i] += int(pred == label)
+
+    def try_batch(t):
+        nonlocal server_busy
+        if server_busy:
+            return
+        out = engine.step(t)
+        if out is None:
+            return
+        scheduler.on_server_batch(len(out["requests"]))
+        server_busy = True
+        push(out["finish"], "srv", out)
+
+    while heap:
+        t, _, kind, payload = heapq.heappop(heap)
+        if t > max_time:
+            break
+        last_t = max(last_t, t)
+        if kind == "dev":
+            i = payload
+            if cursor[i] >= len(datasets[i]):
+                continue
+            j = cursor[i]
+            cursor[i] += 1
+            tokens = datasets[i][j]
+            conf, pred, do_fwd = clients[i].run_local(tokens)
+            label = labels[i][j] if labels is not None else None
+            if do_fwd:
+                fwd_count += 1
+                engine.submit(Request(i, tokens, t, t - clients[i].profile.latency,
+                                      payload=(j, label)))
+                try_batch(t)
+            else:
+                complete(i, clients[i].profile.latency, pred, label)
+            if cursor[i] < len(datasets[i]):
+                push(t + clients[i].profile.latency, "dev", i)
+        elif kind == "srv":
+            server_busy = False
+            for r, pred in zip(payload["requests"], payload["pred"]):
+                j, label = r.payload
+                complete(r.device_id, t - r.start_time, int(pred), label)
+            try_batch(t)
+        elif kind == "window":
+            for i, c in enumerate(clients):
+                sr = c.maybe_report(t)
+                if sr is not None:
+                    c.threshold = scheduler.report(i, sr)
+            if isinstance(scheduler, MultiTASC):
+                scheduler.on_window()
+                th = np.asarray(scheduler.thresholds())
+                for i, c in enumerate(clients):
+                    c.threshold = float(th[i])
+            if model_switching:
+                th = np.array([c.threshold for c in clients])
+                s = int(switching.decide(th, tier_ids, n_tiers,
+                                         switching.DEFAULT_C_LOWER, c_upper))
+                if s != 0 and engine.switch(s):
+                    switches += 1
+            timeline["t"].append(t)
+            timeline["thresholds"].append([c.threshold for c in clients])
+            timeline["model"].append(engine.active.name)
+            if any(cursor[i] < len(datasets[i]) for i in range(n)) \
+                    or len(engine.queue) or server_busy:
+                push(t + window, "window", None)
+
+    tot = np.maximum(total, 1)
+    return CascadeResult(
+        sr=float(100.0 * met.sum() / max(total.sum(), 1)),
+        accuracy=float((correct / tot).mean()) if labels is not None else float("nan"),
+        throughput=float(total.sum() / max(last_t, 1e-9)),
+        forwarded_frac=float(fwd_count / max(total.sum(), 1)),
+        per_device_sr=100.0 * met / tot,
+        timeline=timeline,
+        switches=switches,
+    )

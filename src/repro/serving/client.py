@@ -1,0 +1,55 @@
+"""Device client: light model + forwarding decision function (Fig. 2 left).
+
+Runs the tier's light model on each sample, computes BvSB confidence, and
+applies Eq. 3 against the scheduler-controlled threshold. Timing uses the
+tier's calibrated latency profile (virtual clock) while logits are real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cascade_tiers import DeviceProfile
+from repro.core import decision
+from repro.core.slo import WindowedSLOTracker
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class DeviceClient:
+    device_id: int
+    model: Model
+    params: Any
+    profile: DeviceProfile
+    slo: float
+    window: float
+    threshold: float
+    confidence: str = "bvsb"
+
+    def __post_init__(self):
+        self.tracker = WindowedSLOTracker(self.slo, self.window)
+        metric = decision.METRICS[self.confidence]
+
+        @jax.jit
+        def infer(params, tokens):
+            logits, _, _ = self.model.forward(params, {"tokens": tokens})
+            last = logits[:, -1, :]
+            conf, pred = metric(last)
+            return conf[0], pred[0]
+
+        self._infer = infer
+
+    def run_local(self, tokens) -> tuple:
+        """Returns (confidence, prediction, forward?)."""
+        conf, pred = self._infer(self.params, tokens[None])
+        fwd = bool(conf < self.threshold)
+        return float(conf), int(pred), fwd
+
+    def record_completion(self, latency: float) -> None:
+        self.tracker.record(latency)
+
+    def maybe_report(self, now: float) -> Optional[float]:
+        return self.tracker.maybe_report(now)

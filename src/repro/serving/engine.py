@@ -1,0 +1,103 @@
+"""Server engine: batched inference over the shared heavy model(s).
+
+Hosts one or more server models (paper Sec. IV-E model switching keeps all
+candidates resident; switching changes which compiled executable is
+dispatched — no weight reload). Pulls ladder-bucketed batches from the
+request queue, runs the classification forward (next-token logits of the
+last position as the label distribution), and returns per-sample
+(prediction, confidence) through the result-distribution callback.
+
+Latency accounting: on real TPUs this is wall-clock; on the CPU container
+the engine uses the calibrated ServerProfile latency curve for *virtual*
+time while still computing real logits — so the control loop is exercised
+against real model outputs with reproducible timing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cascade_tiers import BATCH_LADDER, ServerProfile
+from repro.core import decision
+from repro.models.model import Model, build_model
+from repro.serving.batching import pad_batch, pick_bucket
+from repro.serving.queue import Request, RequestQueue
+
+
+@dataclasses.dataclass
+class ServedModel:
+    name: str
+    model: Model
+    params: Any
+    profile: ServerProfile
+
+
+class ServerEngine:
+    """Batched cascade server with model switching."""
+
+    def __init__(self, served: Sequence[ServedModel], confidence="bvsb"):
+        self.served = list(served)
+        self.active_idx = 0
+        self.queue = RequestQueue()
+        self.confidence = decision.METRICS[confidence]
+        self._infer_cache: Dict = {}
+        self.batch_history: List[int] = []
+
+    # -- model switching ---------------------------------------------------
+    @property
+    def active(self) -> ServedModel:
+        return self.served[self.active_idx]
+
+    def switch(self, direction: int) -> bool:
+        """-1 => faster model (lower index), +1 => heavier. Returns True
+        if a switch happened."""
+        new = min(max(self.active_idx + direction, 0), len(self.served) - 1)
+        changed = new != self.active_idx
+        self.active_idx = new
+        return changed
+
+    # -- inference ----------------------------------------------------------
+    def _infer_fn(self, idx: int, bucket: int):
+        key = (idx, bucket)
+        if key not in self._infer_cache:
+            sm = self.served[idx]
+
+            @jax.jit
+            def fn(params, tokens):
+                logits, _, _ = sm.model.forward(params, {"tokens": tokens})
+                last = logits[:, -1, :]
+                conf, pred = self.confidence(last)
+                return conf, pred
+
+            self._infer_cache[key] = fn
+        return self._infer_cache[key]
+
+    def submit(self, req: Request) -> None:
+        self.queue.put(req)
+
+    def step(self, now: float) -> Optional[dict]:
+        """Serve one dynamic batch if the queue is non-empty.
+
+        Returns {"requests", "conf", "pred", "latency", "finish"} or None.
+        """
+        sm = self.active
+        bucket = pick_bucket(len(self.queue), sm.profile.max_batch)
+        if bucket == 0:
+            return None
+        reqs = self.queue.pop_batch(bucket)
+        self.batch_history.append(len(reqs))
+        batch, n = pad_batch([r.sample for r in reqs], bucket)
+        conf, pred = self._infer_fn(self.active_idx, bucket)(sm.params, batch)
+        lat = sm.profile.batch_latency(bucket)
+        return {
+            "requests": reqs,
+            "conf": conf[:n],
+            "pred": pred[:n],
+            "latency": lat,
+            "finish": now + lat,
+            "model": sm.name,
+        }

@@ -1,0 +1,35 @@
+"""Server request queue (paper Fig. 2, "Request queue").
+
+FIFO staging area for forwarded samples. In-process deque standing in for
+the paper's AMQP broker; semantics preserved (FIFO order, timestamped
+entries, result-distribution callbacks carried with the request).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    device_id: int
+    sample: Any                  # model input (e.g. token array)
+    enqueue_time: float
+    start_time: float            # when on-device inference began
+    payload: Any = None          # opaque (e.g. sample index, label)
+
+
+class RequestQueue:
+    def __init__(self):
+        self._q: deque[Request] = deque()
+
+    def put(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop_batch(self, max_n: int) -> list[Request]:
+        n = min(max_n, len(self._q))
+        return [self._q.popleft() for _ in range(n)]
+
+    def __len__(self) -> int:
+        return len(self._q)

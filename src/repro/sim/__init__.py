@@ -1,0 +1,2 @@
+"""Simulators: event-driven oracle (events) + vectorized lax.scan closed
+loop (jaxsim) + calibrated synthetic sample model (synthetic)."""

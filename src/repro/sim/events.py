@@ -1,0 +1,231 @@
+"""Event-driven reference simulator of the multi-device cascade.
+
+Exact discrete-event reproduction of the paper's system (Fig. 2): devices
+stream samples at their inference rate, forward low-confidence samples to
+the shared server queue, the server drains the queue with dynamic batching
+(paper ladder B = {1,2,4,8,16,32,64} capped per model), results return to
+devices, and each device reports its windowed SLO satisfaction rate to the
+scheduler. Used as the ground-truth oracle for the vectorized JAX
+simulator (repro.sim.jaxsim) and for the smaller paper experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.cascade_tiers import (BATCH_LADDER, DeviceProfile,
+                                         ServerProfile)
+from repro.core import switching
+from repro.core.multitasc import MultiTASC
+from repro.sim.synthetic import SampleStream
+
+
+@dataclasses.dataclass
+class DeviceRuntime:
+    profile: DeviceProfile
+    stream: SampleStream
+    slo: float
+    threshold: float
+    cursor: int = 0
+    met: int = 0
+    win_met: int = 0
+    win_total: int = 0
+    total: int = 0
+    correct: int = 0
+    forwarded: int = 0
+    active: bool = True
+    offline_at: Optional[int] = None      # go offline at this sample index
+    offline_for: float = 0.0              # seconds
+
+
+@dataclasses.dataclass
+class SimResult:
+    sr: float                      # overall SLO satisfaction rate [0,100]
+    accuracy: float                # mean per-device accuracy
+    throughput: float              # completed samples / s
+    per_device_sr: np.ndarray
+    per_device_acc: np.ndarray
+    forwarded_frac: float
+    timeline: Dict[str, List]      # window-resolution traces
+    server_model_time: np.ndarray  # seconds spent on each server profile
+
+
+def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
+        scheduler, *, window: float = 1.5, model_switching: bool = False,
+        tier_ids: Optional[np.ndarray] = None,
+        c_lower: float = switching.DEFAULT_C_LOWER,
+        c_upper: Optional[np.ndarray] = None,
+        server_init: int = 0, max_time: float = 10_000.0) -> SimResult:
+    n = len(devices)
+    tier_ids = np.zeros(n, np.int32) if tier_ids is None else np.asarray(tier_ids)
+    n_tiers = int(tier_ids.max()) + 1
+    if c_upper is None:
+        c_upper = np.full(n_tiers, 0.8)
+    server_idx = server_init
+    server_time = np.zeros(len(servers))
+    server_busy = False
+
+    heap: list = []
+    seq = 0
+
+    def push(t, kind, payload=None):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, payload))
+        seq += 1
+
+    for i, dev in enumerate(devices):
+        push(dev.profile.latency, "dev", i)
+    push(window, "window", None)
+
+    queue: deque = deque()    # (start_time, device_id, sample_idx)
+    completed = 0
+    last_t = 0.0
+    timeline = {"t": [], "thresholds": [], "sr": [], "active": [],
+                "accuracy": [], "server_idx": []}
+    win_sr_last = np.full(n, 100.0)
+
+    def record_completion(dev: DeviceRuntime, latency: float, correct: int):
+        nonlocal completed
+        met = latency <= dev.slo
+        dev.met += met
+        dev.win_met += met
+        dev.win_total += 1
+        dev.total += 1
+        dev.correct += correct
+        completed += 1
+
+    def try_start_batch(t):
+        nonlocal server_busy
+        if server_busy or not queue:
+            return
+        prof = servers[server_idx]
+        b = 1
+        for x in BATCH_LADDER:
+            if x <= min(len(queue), prof.max_batch):
+                b = x
+        batch = [queue.popleft() for _ in range(b)]
+        scheduler.on_server_batch(b)
+        lat = prof.batch_latency(b)
+        server_time[server_idx] += lat
+        server_busy = True
+        push(t + lat, "srv", (batch, server_idx))
+
+    while heap:
+        t, _, kind, payload = heapq.heappop(heap)
+        if t > max_time:
+            break
+        last_t = max(last_t, t)
+
+        if kind == "dev":
+            i = payload
+            dev = devices[i]
+            if dev.cursor >= len(dev.stream):
+                continue
+            if dev.offline_at is not None and dev.cursor >= dev.offline_at:
+                dev.offline_at = None
+                dev.active = False
+                push(t + dev.offline_for, "online", i)
+                continue
+            j = dev.cursor
+            dev.cursor += 1
+            if dev.stream.confidence[j] >= dev.threshold:  # Eq. 3: local
+                record_completion(dev, dev.profile.latency,
+                                  int(dev.stream.correct_light[j]))
+            else:
+                dev.forwarded += 1
+                queue.append((t - dev.profile.latency, i, j))
+                try_start_batch(t)
+            if dev.cursor < len(dev.stream):
+                push(t + dev.profile.latency, "dev", i)
+
+        elif kind == "online":
+            i = payload
+            devices[i].active = True
+            if devices[i].cursor < len(devices[i].stream):
+                push(t + devices[i].profile.latency, "dev", i)
+
+        elif kind == "srv":
+            batch, sidx = payload
+            server_busy = False
+            for (start, i, j) in batch:
+                dev = devices[i]
+                record_completion(dev, t - start,
+                                  int(dev.stream.correct_heavy[j, sidx]))
+            try_start_batch(t)
+
+        elif kind == "window":
+            active = np.array([d.active for d in devices])
+            for i, dev in enumerate(devices):
+                if not dev.active:
+                    continue
+                sr = 100.0 if dev.win_total == 0 else \
+                    100.0 * dev.win_met / dev.win_total
+                win_sr_last[i] = sr
+                dev.win_met = 0
+                dev.win_total = 0
+                dev.threshold = scheduler.report(i, sr)
+            if isinstance(scheduler, MultiTASC):
+                scheduler.on_window(active=active)
+                th = np.asarray(scheduler.thresholds())
+                for i, dev in enumerate(devices):
+                    dev.threshold = float(th[i])
+            if model_switching:
+                th = np.array([d.threshold for d in devices])
+                s = int(switching.decide(th, tier_ids, n_tiers, c_lower,
+                                         c_upper, active=active))
+                if s == -1 and server_idx > 0:
+                    server_idx -= 1     # faster model
+                elif s == 1 and server_idx < len(servers) - 1:
+                    server_idx += 1     # heavier model
+            timeline["t"].append(t)
+            timeline["thresholds"].append([d.threshold for d in devices])
+            timeline["sr"].append(win_sr_last.copy())
+            timeline["active"].append(float(active.mean()))
+            accs = [d.correct / d.total if d.total else 1.0 for d in devices]
+            timeline["accuracy"].append(float(np.mean(accs)))
+            timeline["server_idx"].append(server_idx)
+
+            if any(d.cursor < len(d.stream) for d in devices) or queue \
+                    or server_busy:
+                push(t + window, "window", None)
+
+    per_sr = np.array([
+        100.0 * d.met / d.total if d.total else 100.0 for d in devices])
+    per_acc = np.array([
+        d.correct / d.total if d.total else 1.0 for d in devices])
+    total = sum(d.total for d in devices)
+    fwd = sum(d.forwarded for d in devices)
+    return SimResult(
+        sr=float(100.0 * sum(d.met for d in devices) / max(total, 1)),
+        accuracy=float(np.mean(per_acc)),
+        throughput=float(total / max(last_t, 1e-9)),
+        per_device_sr=per_sr,
+        per_device_acc=per_acc,
+        forwarded_frac=float(fwd / max(total, 1)),
+        timeline=timeline,
+        server_model_time=server_time,
+    )
+
+
+# ---------------------------------------------------------------------------
+# convenience harness used by benchmarks/tests
+# ---------------------------------------------------------------------------
+def make_scheduler(name: str, n: int, *, server_profile, slo: float,
+                   init_threshold: float = 0.5, sr_target: float = 95.0,
+                   a: float = 0.005, static_threshold: float = 0.35):
+    from repro.core.multitasc import MultiTASC, MultiTASCConfig
+    from repro.core.multitascpp import MultiTASCPP, MultiTASCPPConfig
+    from repro.core.static import Static
+    if name == "multitasc++":
+        return MultiTASCPP(n, MultiTASCPPConfig(a=a, sr_target=sr_target),
+                           init_threshold)
+    if name == "multitasc":
+        return MultiTASC(n, server_profile, slo, MultiTASCConfig(),
+                         init_threshold)
+    if name == "static":
+        return Static(n, static_threshold)
+    raise KeyError(name)

@@ -1,0 +1,74 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no orbax offline).
+
+Leaves are stored under path-encoded keys ("a/b/0/w"); restore rebuilds
+into a provided structure template so dtypes/shapes are validated.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+BF16_TAG = "__bf16__"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16 cast path: store the raw bits
+            flat[BF16_TAG + key] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree: Any, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def restore(path: str, template: Any):
+    """Returns (tree shaped like template, step or None)."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    step = int(data.pop("__step__")) if "__step__" in data else None
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    flat_template, tdef = leaves_with_path
+    new_leaves = []
+    for path_t, leaf in flat_template:
+        key = SEP.join(_path_str(p) for p in path_t)
+        if BF16_TAG + key in data:
+            arr = data[BF16_TAG + key].view(jnp.bfloat16)
+        elif key in data:
+            arr = data[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), new_leaves)
+    return tree, step

@@ -1,0 +1,52 @@
+"""Knowledge distillation of the light (device) model from the heavy
+(server) model — the substrate that makes cascade pairs work (paper
+Sec. II-A: the light model should agree with the heavy one on easy
+samples and be *uncertain* where it would disagree).
+
+Loss = CE(student, labels) + kd_weight * KL(teacher_T || student_T).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model, cross_entropy
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillConfig:
+    kd_weight: float = 1.0
+    temperature: float = 2.0
+    adamw: opt.AdamWConfig = opt.AdamWConfig(lr=1e-3, total_steps=2000)
+
+
+def kd_loss(student_logits, teacher_logits, temperature):
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, -1)
+    tp = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, -1)
+    return -(tp * sp).sum(-1).mean() * (t * t)
+
+
+def make_distill_step(student: Model, teacher: Model, teacher_params,
+                      dcfg: DistillConfig):
+    def loss_fn(params, batch):
+        s_logits, _, aux = student.forward(params, batch)
+        t_logits, _, _ = teacher.forward(teacher_params, batch)
+        labels = batch.get("labels")
+        ce = cross_entropy(s_logits, labels, student.cfg.vocab_size) \
+            if labels is not None else 0.0
+        kd = kd_loss(s_logits, jax.lax.stop_gradient(t_logits),
+                     dcfg.temperature)
+        return ce + dcfg.kd_weight * kd + aux, {"ce": ce, "kd": kd}
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = opt.update(params, grads, opt_state,
+                                           dcfg.adamw)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return step

@@ -1,0 +1,91 @@
+"""Training loop: jitted train_step with microbatching + remat, metrics,
+periodic checkpointing. Works single-device (examples/tests) and under a
+mesh via pjit shardings from repro.launch.shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LOCAL, MeshContext
+from repro.models.model import Model
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    microbatch: Optional[int] = None   # split global batch into chunks
+    remat: bool = True
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_path: str = "checkpoints/model.npz"
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    mctx: MeshContext = LOCAL) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Microbatching accumulates grads over batch slices (static
+    python loop -> fully visible to the compiler / cost analysis)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, mctx, remat=tcfg.remat)
+
+    def train_step(params, opt_state, batch):
+        mb = tcfg.microbatch
+        b = batch["tokens"].shape[0]
+        if mb is None or mb >= b:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            assert b % mb == 0
+            n_chunks = b // mb
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            loss = jnp.zeros(())
+            metrics = {"ce": jnp.zeros(()), "aux": jnp.zeros(())}
+            for c in range(n_chunks):
+                sl = {k: v[c * mb:(c + 1) * mb] for k, v in batch.items()}
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sl)
+                grads = jax.tree.map(lambda a, b_: a + b_ / n_chunks,
+                                     grads, g)
+                loss += l / n_chunks
+                metrics = {k: metrics[k] + m[k] / n_chunks for k in metrics}
+        params, opt_state, om = opt.update(params, grads, opt_state,
+                                           tcfg.adamw)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def train(model: Model, data, steps: int, tcfg: TrainConfig = TrainConfig(),
+          *, rng=None, params=None, mctx: MeshContext = LOCAL,
+          verbose: bool = True):
+    """Single-host training driver. Returns (params, opt_state, history)."""
+    rng = jax.random.key(0) if rng is None else rng
+    if params is None:
+        params = model.init(rng)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, tcfg, mctx))
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = data.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == steps - 1:
+            row = {k: float(v) for k, v in metrics.items()}
+            row["step"] = step
+            row["wall"] = time.time() - t0
+            history.append(row)
+            if verbose:
+                print(f"step {step:5d} loss {row['loss']:.4f} "
+                      f"lr {row['lr']:.2e} gnorm {row['grad_norm']:.2f}")
+        if tcfg.ckpt_every and step and step % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_path, params, step)
+    return params, opt_state, history

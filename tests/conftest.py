@@ -1,0 +1,9 @@
+import os
+
+# smoke tests / benches must see ONE device (the dry-run sets its own flag
+# inside repro.launch.dryrun, run as a separate process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.bvsb import bvsb
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+
+
+@pytest.mark.parametrize("b,v", [(8, 1024), (16, 2048), (8, 512), (32, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bvsb_sweep(b, v, dtype):
+    x = (jax.random.normal(jax.random.key(b * v), (b, v)) * 4).astype(dtype)
+    got_b, got_i = bvsb(x, interpret=True)
+    exp_b, exp_i = ref.bvsb_ref(x)
+    np.testing.assert_allclose(got_b, exp_b, atol=2e-3)
+    assert jnp.mean((got_i == exp_i).astype(jnp.float32)) > 0.99
+
+
+def test_bvsb_extreme_logits():
+    x = jnp.zeros((8, 512)).at[:, 7].set(100.0)  # near-one-hot
+    got_b, got_i = bvsb(x, interpret=True)
+    np.testing.assert_allclose(got_b, 1.0, atol=1e-5)
+    assert bool(jnp.all(got_i == 7))
+
+
+@pytest.mark.parametrize("s,h,kv,hd", [
+    (512, 8, 8, 64),    # MHA
+    (512, 8, 2, 64),    # GQA
+    (1024, 4, 1, 128),  # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, kv, hd, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (2, s, h, hd)).astype(dtype)
+    k = jax.random.normal(k2, (2, s, kv, hd)).astype(dtype)
+    v = jax.random.normal(k3, (2, s, kv, hd)).astype(dtype)
+    got = flash_attention(q, k, v, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [128, 384])
+def test_flash_attention_windowed(window):
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(k1, (1, 512, 4, 64))
+    k = jax.random.normal(k2, (1, 512, 2, 64))
+    v = jax.random.normal(k3, (1, 512, 2, 64))
+    got = flash_attention(q, k, v, window=window, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(got, exp, atol=2e-5)
+
+
+@pytest.mark.parametrize("w,kv,h,hd", [
+    (1024, 2, 8, 64), (2048, 1, 4, 128), (512, 4, 4, 64)])
+def test_decode_attention_sweep(w, kv, h, hd):
+    b = 4
+    keys = jax.random.split(jax.random.key(2), 4)
+    q = jax.random.normal(keys[0], (b, h, hd))
+    kc = jax.random.normal(keys[1], (b, w, kv, hd))
+    vc = jax.random.normal(keys[2], (b, w, kv, hd))
+    lengths = jnp.array([w, w // 2, 1, w - 3])
+    got = decode_attention(q, kc, vc, lengths, interpret=True)
+    exp = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(got, exp, atol=2e-5)
+
+
+@pytest.mark.parametrize("s,d", [(128, 256), (256, 512), (384, 256)])
+def test_rglru_scan_sweep(s, d):
+    b = 2
+    keys = jax.random.split(jax.random.key(3), 3)
+    a = jax.nn.sigmoid(jax.random.normal(keys[0], (b, s, d)))
+    u = jax.random.normal(keys[1], (b, s, d))
+    h0 = jax.random.normal(keys[2], (b, d))
+    got = rglru_scan(a, u, h0, interpret=True)
+    exp = ref.rglru_scan_ref(a, u, h0)
+    np.testing.assert_allclose(got, exp, atol=1e-5)
+
+
+def test_rglru_scan_no_init_state():
+    a = jnp.full((1, 128, 256), 0.5)
+    u = jnp.ones((1, 128, 256))
+    got = rglru_scan(a, u, interpret=True)
+    exp = ref.rglru_scan_ref(a, u)
+    np.testing.assert_allclose(got, exp, atol=1e-5)
+    # closed form limit: h_inf = u/(1-a) = 2
+    assert abs(float(got[0, -1, 0]) - 2.0) < 1e-3

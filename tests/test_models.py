@@ -1,0 +1,151 @@
+"""Model correctness: attention path equivalence, prefill/decode
+consistency, MoE semantics, M-RoPE, losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import LOCAL
+from repro.models.model import build_model, cross_entropy
+
+
+def _rand_qkv(s, h, kv, hd, b=2, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(ks[0], (b, s, h, hd)),
+            jax.random.normal(ks[1], (b, s, kv, hd)),
+            jax.random.normal(ks[2], (b, s, kv, hd)))
+
+
+def test_attention_paths_equivalent_causal():
+    """dense == chunked == windowed(w>=s) on the same inputs."""
+    q, k, v = _rand_qkv(1024, 8, 2, 64)
+    dense = attn.dense_attention(q, k, v, causal=True, window=None)
+    chunked = attn.chunked_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(dense, chunked, atol=2e-5)
+
+
+def test_attention_windowed_path_equivalent():
+    q, k, v = _rand_qkv(2048, 4, 4, 64, seed=1)
+    w = 512
+    dense = attn.dense_attention(q, k, v, causal=True, window=w)
+    windowed = attn.windowed_attention(q, k, v, window=w)
+    chunked = attn.chunked_attention(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(dense, windowed, atol=2e-5)
+    np.testing.assert_allclose(dense, chunked, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "gemma-7b",
+                                  "recurrentgemma-9b", "xlstm-350m",
+                                  "granite-moe-1b-a400m",
+                                  "seamless-m4t-medium", "qwen2-vl-7b"])
+def test_prefill_decode_consistency(arch, monkeypatch):
+    """Token-by-token decode reproduces teacher-forced logits."""
+    monkeypatch.setattr(moe_mod, "CAPACITY_FACTOR", 100.0)  # no drops
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    b, s = 2, 12
+    rng = jax.random.key(7)
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.is_encoder_decoder:
+        batch["audio_embeds"] = jax.random.normal(
+            rng, (b, cfg.audio_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        # decode path is text-only; compare on text-only sequence
+        pass
+    full, _, _ = model.forward(params, batch)
+    cache = model.init_cache(params, b, s + 4, jnp.float32)
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        cache = encdec.prefill_cross(params, cfg, batch["audio_embeds"],
+                                     cache)
+    outs = []
+    for t in range(s):
+        lg, cache = model.decode_step(params, toks[:, t:t + 1], cache,
+                                      jnp.full((b,), t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    if cfg.family == "vlm":
+        full = full[:, -s:]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=5e-3)
+
+
+def test_ring_cache_beyond_window():
+    """Decode far past the window: ring buffer == windowed reference."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(4))
+    b, s = 1, 40  # window (reduced) = 128 > 40; use smaller window
+    cfg2 = cfg.with_(local_attn_window=16)
+    model2 = build_model(cfg2)
+    toks = jax.random.randint(jax.random.key(5), (b, s), 0, cfg2.vocab_size)
+    full, _, _ = model2.forward(params, {"tokens": toks})
+    cache = model2.init_cache(params, b, s, jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = model2.decode_step(params, toks[:, t:t + 1], cache,
+                                       jnp.full((b,), t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=5e-3)
+
+
+def test_moe_routes_topk_and_drops_within_capacity(monkeypatch):
+    monkeypatch.setattr(moe_mod, "CAPACITY_FACTOR", 100.0)
+    cfg = get_config("deepseek-moe-16b").reduced()
+    import jax
+    from repro.models.common import KeyGen
+    p = moe_mod.moe_init(KeyGen(jax.random.key(0)), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    y, aux = moe_mod.moe_apply(p, x, cfg, LOCAL, return_aux=True)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) > 0
+    # manual reference: dense top-k mixture
+    xf = x.reshape(-1, cfg.d_model)
+    gates, ids, _ = moe_mod._route(xf, p["router"], cfg)
+    ref = jnp.zeros_like(xf)
+    for e in range(cfg.num_experts):
+        he = jax.nn.silu(xf @ p["w_gate"][e]) * (xf @ p["w_up"][e])
+        oe = he @ p["w_down"][e]
+        w = jnp.where(ids == e, gates, 0.0).sum(-1)
+        ref += oe * w[:, None]
+    ref += moe_mod._shared_expert(p["shared"], xf, jax.nn.silu)
+    np.testing.assert_allclose(y.reshape(-1, cfg.d_model), ref, atol=1e-4)
+
+
+def test_mrope_differs_from_rope_on_grid():
+    from repro.models import common
+    x = jax.random.normal(jax.random.key(0), (1, 8, 2, 32))
+    pos = jnp.arange(8)[None, :]
+    pos3_text = jnp.stack([pos, pos, pos])   # all-equal sections == rope
+    rope = common.apply_rope(x, pos, 10000.0)
+    mrope = common.apply_mrope(x, pos3_text, 10000.0, (6, 5, 5))
+    np.testing.assert_allclose(rope, mrope, atol=1e-5)
+    pos3_grid = jnp.stack([pos * 0, pos // 2, pos % 2])
+    mrope2 = common.apply_mrope(x, pos3_grid, 10000.0, (6, 5, 5))
+    assert float(jnp.max(jnp.abs(mrope2 - rope))) > 1e-3
+
+
+def test_cross_entropy_ignore_index():
+    logits = jax.random.normal(jax.random.key(0), (2, 4, 16))
+    labels = jnp.array([[1, 2, -100, 3], [-100, -100, 5, 6]])
+    ce = cross_entropy(logits, labels, 16)
+    assert bool(jnp.isfinite(ce))
+    all_ignored = cross_entropy(logits, jnp.full((2, 4), -100), 16)
+    assert float(all_ignored) == 0.0
+
+
+def test_vocab_padding_masked_in_logits():
+    cfg = get_config("granite-moe-1b-a400m").reduced()  # vocab 1024 (padded)
+    cfg = cfg.with_(vocab_size=1000)  # force padding
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    logits, _, _ = model.forward(
+        params, {"tokens": jnp.zeros((1, 4), jnp.int32)})
+    assert logits.shape[-1] == 1024
+    assert float(logits[..., 1000:].max()) < -1e29

@@ -1,0 +1,161 @@
+"""Unit + property tests for the MultiTASC++ scheduler core (paper Sec. IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import multitasc as mt
+from repro.core import multitascpp as mtpp
+from repro.core import switching
+from repro.core.calibration import calibrate_static_threshold
+from repro.sim import synthetic
+
+CFG = mtpp.MultiTASCPPConfig()
+
+
+def test_eq4_continuous_update_direction():
+    """Eq. 4: SR below target -> threshold decreases (forward less);
+    SR above target -> threshold increases (forward more)."""
+    state = mtpp.init_state(3, 0.5)
+    sr = jnp.array([80.0, 95.0, 100.0])  # target 95
+    new = mtpp.update(state, sr, CFG)
+    assert new["thresh"][0] < 0.5          # under target -> stricter
+    assert new["thresh"][1] == pytest.approx(0.5)  # on target -> unchanged
+    assert new["thresh"][2] > 0.5          # over target -> relaxed
+
+
+def test_eq4_magnitude():
+    """dthresh = -a (SR_target - SR_update), a = 0.005."""
+    state = mtpp.init_state(1, 0.5)
+    new = mtpp.update(state, jnp.array([85.0]), CFG)
+    # raising=False branch: thresh + (-0.005 * (95 - 85)) = 0.45
+    assert float(new["thresh"][0]) == pytest.approx(0.45, abs=1e-6)
+
+
+def test_alg1_multiplier_grows_and_resets():
+    state = mtpp.init_state(1, 0.5)
+    # raising: SR 100 > target
+    s1 = mtpp.update(state, jnp.array([100.0]), CFG, n_active=1)
+    assert float(s1["mult"][0]) == pytest.approx(1.1)  # 1*(1+0.1/1)
+    s2 = mtpp.update(s1, jnp.array([100.0]), CFG, n_active=1)
+    assert float(s2["mult"][0]) == pytest.approx(1.21, abs=1e-6)
+    # non-raising resets to 1
+    s3 = mtpp.update(s2, jnp.array([50.0]), CFG, n_active=1)
+    assert float(s3["mult"][0]) == 1.0
+
+
+def test_alg1_penalty_scales_with_devices():
+    s_small = mtpp.update(mtpp.init_state(1, 0.5), jnp.array([100.0]), CFG,
+                          n_active=1)
+    s_big = mtpp.update(mtpp.init_state(1, 0.5), jnp.array([100.0]), CFG,
+                        n_active=100)
+    assert float(s_big["mult"][0]) < float(s_small["mult"][0])
+
+
+def test_per_device_targets():
+    """MultiTASC++ supports independent per-device SLO targets."""
+    state = mtpp.init_state(2, 0.5)
+    sr = jnp.array([90.0, 90.0])
+    new = mtpp.update(state, sr, CFG, sr_target=jnp.array([95.0, 85.0]))
+    assert new["thresh"][0] < 0.5 < new["thresh"][1]
+
+
+@given(
+    thresh=st.floats(0.0, 1.0),
+    mult=st.floats(1.0, 3.0),
+    sr=st.floats(0.0, 100.0),
+    target=st.floats(50.0, 100.0),
+    n=st.integers(1, 200),
+)
+@settings(max_examples=200, deadline=None)
+def test_property_threshold_bounded(thresh, mult, sr, target, n):
+    """Invariant: thresholds stay in [0,1]; multiplier >= 1."""
+    state = {"thresh": jnp.array([thresh], jnp.float32),
+             "mult": jnp.array([mult], jnp.float32)}
+    new = mtpp.update(state, jnp.array([sr], jnp.float32), CFG,
+                      sr_target=target, n_active=n)
+    t = float(new["thresh"][0])
+    assert 0.0 <= t <= 1.0
+    assert float(new["mult"][0]) >= 1.0
+
+
+@given(
+    sr_lo=st.floats(0.0, 100.0), sr_hi=st.floats(0.0, 100.0),
+    thresh=st.floats(0.05, 0.95),
+)
+@settings(max_examples=100, deadline=None)
+def test_property_update_monotone_in_sr(sr_lo, sr_hi, thresh):
+    """Higher reported SR never yields a lower new threshold."""
+    if sr_lo > sr_hi:
+        sr_lo, sr_hi = sr_hi, sr_lo
+    state = {"thresh": jnp.array([thresh, thresh], jnp.float32),
+             "mult": jnp.ones((2,), jnp.float32)}
+    new = mtpp.update(state, jnp.array([sr_lo, sr_hi], jnp.float32), CFG,
+                      n_active=2)
+    assert float(new["thresh"][1]) >= float(new["thresh"][0]) - 1e-6
+
+
+def test_inactive_devices_untouched():
+    state = mtpp.init_state(2, 0.5)
+    new = mtpp.update(state, jnp.array([50.0, 50.0]), CFG,
+                      active=jnp.array([True, False]))
+    assert float(new["thresh"][0]) < 0.5
+    assert float(new["thresh"][1]) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# MultiTASC baseline
+# ---------------------------------------------------------------------------
+def test_multitasc_step_updates():
+    state = mt.init_state(2, 0.5)
+    cfg = mt.MultiTASCConfig(step=0.05)
+    over = mt.update(state, observed_batch=64, b_opt=16, cfg=cfg)
+    assert np.allclose(np.asarray(over["thresh"]), 0.45)
+    under = mt.update(state, observed_batch=2, b_opt=16, cfg=cfg)
+    assert np.allclose(np.asarray(under["thresh"]), 0.55)
+
+
+# ---------------------------------------------------------------------------
+# model switching (Sec. IV-E)
+# ---------------------------------------------------------------------------
+def test_switching_rules():
+    tiers = jnp.array([0, 0, 1, 1])
+    up = jnp.array([0.8, 0.75])
+    # one tier fully below c_lower -> faster (-1)
+    th = jnp.array([0.01, 0.02, 0.5, 0.6])
+    assert int(switching.decide(th, tiers, 2, 0.05, up)) == -1
+    # everyone above upper -> heavier (+1)
+    th = jnp.array([0.9, 0.95, 0.9, 0.9])
+    assert int(switching.decide(th, tiers, 2, 0.05, up)) == 1
+    # mixed -> 0
+    th = jnp.array([0.5, 0.9, 0.2, 0.9])
+    assert int(switching.decide(th, tiers, 2, 0.05, up)) == 0
+
+
+@given(th=st.lists(st.floats(0.0, 1.0), min_size=2, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_property_switching_valid_output(th):
+    tiers = np.zeros(len(th), np.int32)
+    s = int(switching.decide(jnp.array(th), tiers, 1, 0.05,
+                             jnp.array([0.8])))
+    assert s in (-1, 0, 1)
+    # -1 and +1 are mutually exclusive by construction
+    if all(t > 0.8 for t in th):
+        assert s == 1
+    if all(t < 0.05 for t in th):
+        assert s == -1
+
+
+# ---------------------------------------------------------------------------
+# calibration (paper Sec. V-A protocol)
+# ---------------------------------------------------------------------------
+def test_static_calibration_protocol():
+    cal = synthetic.calibration_set(0.7185, 0.7829)
+    t, info = calibrate_static_threshold(cal.confidence, cal.correct_light,
+                                         cal.correct_heavy[:, 0])
+    assert 0.0 < t < 1.0
+    # accuracy at chosen threshold within 1pp of best achievable
+    assert info["best_cascade_acc"] - info["acc_at_threshold"] <= 0.0101
+    assert info["server_acc"] > info["local_acc"]

@@ -1,0 +1,106 @@
+"""Serving-layer tests: queue, dynamic batching, engine, live cascade."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.configs.cascade_tiers import (BATCH_LADDER, DEVICE_PROFILES,
+                                         SERVER_PROFILES)
+from repro.models.model import build_model
+from repro.serving.batching import pad_batch, pick_bucket
+from repro.serving.cascade import run_cascade
+from repro.serving.client import DeviceClient
+from repro.serving.engine import Request, ServedModel, ServerEngine
+from repro.serving.queue import RequestQueue
+from repro.sim.events import make_scheduler
+
+
+def test_queue_fifo():
+    q = RequestQueue()
+    for i in range(5):
+        q.put(Request(i, None, float(i), float(i)))
+    batch = q.pop_batch(3)
+    assert [r.device_id for r in batch] == [0, 1, 2]
+    assert len(q) == 2
+
+
+@given(qlen=st.integers(0, 300), cap=st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=100, deadline=None)
+def test_property_pick_bucket(qlen, cap):
+    b = pick_bucket(qlen, cap)
+    if qlen == 0:
+        assert b == 0
+    else:
+        assert b in BATCH_LADDER
+        assert b <= min(qlen, cap)
+        # maximality: no larger ladder entry fits
+        for x in BATCH_LADDER:
+            if x <= min(qlen, cap):
+                assert b >= x
+
+
+def test_pad_batch():
+    samples = [jnp.ones((4,)) * i for i in range(3)]
+    batch, n = pad_batch(samples, 8)
+    assert batch.shape == (8, 4) and n == 3
+    assert float(batch[3, 0]) == 2.0  # padded with last sample
+
+
+@pytest.fixture(scope="module")
+def tiny_pair():
+    lcfg = get_config("tier-low")
+    hcfg = get_config("tier-server-fast")
+    lm, hm = build_model(lcfg), build_model(hcfg)
+    return (lm, lm.init(jax.random.key(0)), lcfg), \
+        (hm, hm.init(jax.random.key(1)), hcfg)
+
+
+def test_engine_dynamic_batching(tiny_pair):
+    (lm, lp, lcfg), (hm, hp, hcfg) = tiny_pair
+    engine = ServerEngine([ServedModel(
+        "fast", hm, hp, SERVER_PROFILES["inceptionv3"])])
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        engine.submit(Request(i % 3, jnp.asarray(
+            rng.integers(0, hcfg.vocab_size, 8), jnp.int32), 0.0, 0.0))
+    out = engine.step(now=1.0)
+    assert out is not None
+    assert len(out["requests"]) == 8  # largest ladder <= 10
+    assert out["conf"].shape == (8,)
+    assert len(engine.queue) == 2
+    assert out["finish"] > 1.0
+
+
+def test_engine_model_switching(tiny_pair):
+    (lm, lp, lcfg), (hm, hp, hcfg) = tiny_pair
+    engine = ServerEngine([
+        ServedModel("fast", hm, hp, SERVER_PROFILES["inceptionv3"]),
+        ServedModel("heavy", hm, hp, SERVER_PROFILES["efficientnetb3"]),
+    ])
+    assert engine.active.name == "fast"
+    assert engine.switch(+1) and engine.active.name == "heavy"
+    assert not engine.switch(+1)  # clamped
+    assert engine.switch(-1) and engine.active.name == "fast"
+
+
+def test_live_cascade_end_to_end(tiny_pair):
+    (lm, lp, lcfg), (hm, hp, hcfg) = tiny_pair
+    n, samples = 3, 12
+    clients = [DeviceClient(i, lm, lp, DEVICE_PROFILES["low"], 0.15, 1.5,
+                            0.5) for i in range(n)]
+    engine = ServerEngine([ServedModel(
+        "fast", hm, hp, SERVER_PROFILES["inceptionv3"])])
+    sched = make_scheduler("multitasc++", n,
+                           server_profile=SERVER_PROFILES["inceptionv3"],
+                           slo=0.15)
+    rng = np.random.default_rng(1)
+    datasets = [[jnp.asarray(rng.integers(0, lcfg.vocab_size, 8), jnp.int32)
+                 for _ in range(samples)] for _ in range(n)]
+    res = run_cascade(clients, engine, sched, datasets)
+    assert res.throughput > 0
+    assert 0 <= res.sr <= 100
+    assert res.forwarded_frac <= 1.0
+    assert len(res.timeline["t"]) >= 1

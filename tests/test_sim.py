@@ -1,0 +1,118 @@
+"""Simulator tests: event-sim behaviour + jaxsim cross-validation + the
+paper's qualitative claims as executable assertions."""
+import numpy as np
+import pytest
+
+from repro.configs.cascade_tiers import DEVICE_PROFILES, SERVER_PROFILES
+from repro.core.calibration import calibrate_static_threshold
+from repro.sim import events, jaxsim, synthetic
+
+DP = DEVICE_PROFILES["low"]
+SP = SERVER_PROFILES["inceptionv3"]
+STATIC_T = 0.986
+
+
+def _run_events(sched, n, samples=400, slo=0.15, seed=0, **kw):
+    devs = [events.DeviceRuntime(
+        DP, synthetic.generate(samples, DP.accuracy, SP.accuracy,
+                               seed * 1000 + i), slo,
+        STATIC_T if sched == "static" else 0.5) for i in range(n)]
+    s = events.make_scheduler(sched, n, server_profile=SP, slo=slo,
+                              static_threshold=STATIC_T)
+    return events.run(devs, [SP], s, **kw)
+
+
+def _run_jax(sched, n, samples=400, slo=0.15, seed=0):
+    streams = synthetic.device_streams(n, samples, DP.accuracy, SP.accuracy,
+                                       seed)
+    spec = jaxsim.JaxSimSpec(scheduler=sched, n_devices=n,
+                             samples_per_device=samples,
+                             static_threshold=STATIC_T)
+    return jaxsim.run(spec, streams, np.full(n, DP.latency),
+                      np.full(n, slo), (SP,))
+
+
+def test_low_load_all_meet_slo():
+    r = _run_events("multitasc++", 3)
+    assert r.sr > 99.0
+    assert r.accuracy > DP.accuracy  # cascade beats device-only
+
+
+def test_static_collapses_under_load():
+    """Paper Fig. 4: Static degrades beyond the server's capacity."""
+    r = _run_events("static", 90)
+    assert r.sr < 70.0
+
+
+def test_multitascpp_holds_target_under_load():
+    """Paper claim (i): MultiTASC++ keeps SR ~95 where Static collapses."""
+    r = _run_events("multitasc++", 90)
+    assert r.sr > 90.0
+
+
+def test_multitascpp_trades_accuracy_not_slo():
+    lo = _run_events("multitasc++", 3)
+    hi = _run_events("multitasc++", 90)
+    assert hi.accuracy < lo.accuracy          # traded accuracy...
+    assert hi.accuracy > DP.accuracy - 0.01   # ...but still ~>= device-only
+    assert hi.sr > 90.0                       # ...and kept the SLO
+
+
+def test_throughput_scales_linearly():
+    """Paper Fig. 6: throughput keeps scaling with devices."""
+    r20 = _run_events("multitasc++", 20)
+    r60 = _run_events("multitasc++", 60)
+    assert r60.throughput > 2.5 * r20.throughput
+
+
+def test_jaxsim_matches_event_sim():
+    """The vectorized lax.scan simulator reproduces the event oracle."""
+    for sched in ("multitasc++", "static"):
+        re_ = _run_events(sched, 20)
+        rj = _run_jax(sched, 20)
+        assert abs(float(rj["sr"]) - re_.sr) < 4.0, sched
+        assert abs(float(rj["accuracy"]) - re_.accuracy) < 0.01, sched
+
+
+def test_jaxsim_conserves_samples():
+    n, samples = 10, 200
+    out = _run_jax("multitasc++", n, samples=samples)
+    assert int(out["completed"]) == n * samples
+    assert int(out["queue_left"]) == 0
+
+
+def test_intermittent_participation():
+    """Paper Fig. 19: devices dropping out; SR stays near target and
+    thresholds rise when fewer devices are active."""
+    n, samples = 20, 400
+    streams = synthetic.device_streams(n, samples, DP.accuracy, SP.accuracy, 3)
+    spec = jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=n,
+                             samples_per_device=samples)
+    rng = np.random.default_rng(0)
+    off_start = np.where(rng.random(n) < 0.5,
+                         samples * DP.latency * 0.5, np.inf)
+    out = jaxsim.run(spec, streams, np.full(n, DP.latency),
+                     np.full(n, 0.15), (SP,),
+                     offline_start=off_start,
+                     offline_for=np.full(n, 8.0))
+    assert float(out["sr"]) > 88.0
+
+
+def test_model_switching_low_load_upgrades():
+    """Paper Fig. 17: under low load the scheduler switches to the heavier
+    model for accuracy."""
+    n, samples = 4, 400
+    servers = (SERVER_PROFILES["inceptionv3"], SERVER_PROFILES["efficientnetb3"])
+    streams = synthetic.device_streams(
+        n, samples, DP.accuracy,
+        [s.accuracy for s in servers], 5)
+    spec = jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=n,
+                             samples_per_device=samples,
+                             model_switching=True, server_init=0)
+    out = jaxsim.run(spec, streams, np.full(n, DP.latency),
+                     np.full(n, 0.15), servers,
+                     c_upper=np.array([0.8], np.float32))
+    tr = np.asarray(out["traces"]["server_idx"])
+    tr = tr[~np.isnan(tr)]
+    assert tr.max() == 1.0          # switched up to the heavy model
+    assert float(out["sr"]) > 90.0  # without violating the SLO

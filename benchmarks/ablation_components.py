@@ -7,44 +7,52 @@ them. We ablate: (a) full MultiTASC++; (b) Eq. 4 only (mult_growth=0);
 Scenario chosen to stress *upward* adaptation (where Alg. 1 acts): few
 devices, under-utilized server, low initial threshold -> accuracy is won
 by raising thresholds quickly.
+
+Because `a` and `mult_growth` are traced scalars, ALL variants x seeds of
+one device count run in a single batched ``run_sweep`` call — one compile
+per device count for the whole ablation.
 """
 import time
 
 import numpy as np
 
-from benchmarks.common import (DEVICE_PROFILES, SERVER_PROFILES, SEEDS,
-                               Row)
-from repro.sim import jaxsim, synthetic
+from benchmarks import common
+from benchmarks.common import DEVICE_PROFILES, SERVER_PROFILES, Row
+from repro.sim import jaxsim
 
 SLO = 0.15
 SAMPLES = 400
+
+VARIANTS = (
+    ("full", dict(a=0.005, mult_growth=0.1)),
+    ("eq4_only", dict(a=0.005, mult_growth=0.0)),
+    ("eq4_4x_gain", dict(a=0.02, mult_growth=0.0)),
+)
 
 
 def run():
     dev = DEVICE_PROFILES["low"]
     srv = SERVER_PROFILES["inceptionv3"]
     rows = []
-    variants = (
-        ("full", dict(a=0.005, mult_growth=0.1)),
-        ("eq4_only", dict(a=0.005, mult_growth=0.0)),
-        ("eq4_4x_gain", dict(a=0.02, mult_growth=0.0)),
-    )
-    for name, kw in variants:
-        for n in (2, 10, 40, 100):
-            t0 = time.time()
-            srs, accs = [], []
-            for seed in SEEDS:
-                streams = synthetic.device_streams(
-                    n, SAMPLES, dev.accuracy, srv.accuracy, seed)
-                spec = jaxsim.JaxSimSpec(
-                    scheduler="multitasc++", n_devices=n,
-                    samples_per_device=SAMPLES, init_threshold=0.05, **kw)
-                out = jaxsim.run(spec, streams, np.full(n, dev.latency),
-                                 np.full(n, SLO), (srv,))
-                srs.append(float(out["sr"]))
-                accs.append(float(out["accuracy"]))
-            wall = (time.time() - t0) / len(SEEDS) * 1e6
+    seeds = common.SEEDS
+    for n in (2, 10, 40, 100):
+        t0 = time.perf_counter()
+        streams = common.cached_streams(seeds, n, SAMPLES, dev.accuracy,
+                                        (srv.accuracy,))
+        # variants on the outer axis, seeds inner: (V * len(seeds), n, s)
+        tiled = {k: np.concatenate([v] * len(VARIANTS))
+                 for k, v in streams.items()}
+        specs = [jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=n,
+                                   samples_per_device=SAMPLES,
+                                   init_threshold=0.05, **kw)
+                 for _, kw in VARIANTS for _ in seeds]
+        out = jaxsim.run_sweep(specs, tiled, np.full(n, dev.latency),
+                               np.full(n, SLO), (srv,))
+        srs = np.asarray(out["sr"]).reshape(len(VARIANTS), len(seeds))
+        accs = np.asarray(out["accuracy"]).reshape(len(VARIANTS), len(seeds))
+        wall = (time.perf_counter() - t0) / (len(VARIANTS) * len(seeds)) * 1e6
+        for i, (name, _) in enumerate(VARIANTS):
             rows.append(Row(
                 f"ablation/{name}/n={n}", wall,
-                f"sr={np.mean(srs):.2f};acc={np.mean(accs):.4f}"))
+                f"sr={srs[i].mean():.2f};acc={accs[i].mean():.4f}"))
     return rows

@@ -2,11 +2,16 @@
 
 Each figure module exposes ``run() -> list[Row]``; benchmarks/run.py
 prints them as ``name,us_per_call,derived`` CSV (us_per_call = wall time
-of the sim/kernel call; derived = the figure's metrics).
+of the sim/kernel call per sweep point; derived = the figure's metrics).
+
+All sim figures go through ``jaxsim.run_sweep``: the seeds of one sweep
+point run batched in a single vmapped call, and sample streams are cached
+so the schedulers of one figure share them instead of regenerating.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List
 
@@ -32,6 +37,7 @@ class Row:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
 
 
+@functools.lru_cache(maxsize=None)
 def static_threshold_for(dev: DeviceProfile, srv: ServerProfile) -> float:
     cal = synthetic.calibration_set(dev.accuracy, srv.accuracy)
     t, _ = calibrate_static_threshold(cal.confidence, cal.correct_light,
@@ -39,31 +45,50 @@ def static_threshold_for(dev: DeviceProfile, srv: ServerProfile) -> float:
     return t
 
 
+@functools.lru_cache(maxsize=32)
+def _streams_cached(seeds, n, samples, light_accs, heavy_accs):
+    return synthetic.batched_device_streams(
+        seeds, n, samples, np.asarray(light_accs), list(heavy_accs))
+
+
+def cached_streams(seeds, n, samples, light_accs, heavy_accs):
+    """Batched (len(seeds), n, samples) streams, cached across schedulers
+    so every figure generates each stream tensor once."""
+    light = tuple(float(a) for a in np.atleast_1d(light_accs))
+    heavy = tuple(float(a) for a in np.atleast_1d(heavy_accs))
+    return _streams_cached(tuple(seeds), n, samples,
+                           light[0] if len(light) == 1 else light, heavy)
+
+
 def run_point(scheduler: str, n: int, dev: DeviceProfile,
-              servers, slo: float, *, seeds=SEEDS, samples=SAMPLES,
+              servers, slo: float, *, seeds=None, samples=None,
               static_t: float | None = None, **sim_kw) -> Dict:
-    """Mean/min/max over seeds of (sr, accuracy, throughput)."""
+    """Mean/min/max over seeds of (sr, accuracy, throughput).
+
+    All seeds run in ONE batched ``run_sweep`` call; seeds/samples default
+    to the *current* module values so ``--quick`` applies everywhere.
+    """
+    seeds = SEEDS if seeds is None else seeds
+    samples = SAMPLES if samples is None else samples
     if static_t is None and scheduler == "static":
         static_t = static_threshold_for(dev, servers[0])
-    srs, accs, thrs = [], [], []
-    wall = 0.0
-    for seed in seeds:
-        streams = synthetic.device_streams(
-            n, samples, dev.accuracy, [s.accuracy for s in servers], seed)
-        spec = jaxsim.JaxSimSpec(
-            scheduler=scheduler, n_devices=n, samples_per_device=samples,
-            static_threshold=static_t or 0.35, **sim_kw)
-        t0 = time.time()
-        out = jaxsim.run(spec, streams, np.full(n, dev.latency),
-                         np.full(n, slo), tuple(servers))
-        srs.append(float(out["sr"]))
-        accs.append(float(out["accuracy"]))
-        thrs.append(float(out["throughput"]))
-        wall += time.time() - t0
+    streams = cached_streams(seeds, n, samples, dev.accuracy,
+                             [s.accuracy for s in servers])
+    spec = jaxsim.JaxSimSpec(
+        scheduler=scheduler, n_devices=n, samples_per_device=samples,
+        static_threshold=static_t or 0.35, **sim_kw)
+    t0 = time.perf_counter()
+    out = jaxsim.run_sweep(spec, streams, np.full(n, dev.latency),
+                           np.full(n, slo), tuple(servers))
+    srs = np.asarray(out["sr"], np.float64)
+    accs = np.asarray(out["accuracy"], np.float64)
+    thrs = np.asarray(out["throughput"], np.float64)
+    wall = time.perf_counter() - t0
     return {
-        "sr": float(np.mean(srs)), "sr_min": min(srs), "sr_max": max(srs),
-        "acc": float(np.mean(accs)),
-        "thr": float(np.mean(thrs)),
+        "sr": float(srs.mean()), "sr_min": float(srs.min()),
+        "sr_max": float(srs.max()),
+        "acc": float(accs.mean()),
+        "thr": float(thrs.mean()),
         "wall_us": wall / len(seeds) * 1e6,
     }
 

@@ -1,12 +1,14 @@
 """Paper Fig. 17/18: server model switching on/off, initialized from
-either server model (InceptionV3 <-> EfficientNetB3), 150 ms SLO."""
+either server model (InceptionV3 <-> EfficientNetB3), 150 ms SLO. Seeds
+run batched through ``run_sweep``; switch counts come from the per-window
+``server_idx`` trace rows."""
 import time
 
 import numpy as np
 
-from benchmarks.common import (DEVICE_PROFILES, SERVER_PROFILES, SAMPLES,
-                               SEEDS, Row)
-from repro.sim import jaxsim, synthetic
+from benchmarks import common
+from benchmarks.common import DEVICE_PROFILES, SERVER_PROFILES, Row
+from repro.sim import jaxsim
 
 SLO = 0.15
 SERVERS = ("inceptionv3", "efficientnetb3")  # fast -> heavy order
@@ -19,32 +21,30 @@ def run():
     for init_idx, init_name in ((0, "inceptionv3"), (1, "efficientnetb3")):
         for switching in (True, False):
             for n in (2, 6, 12, 16, 24):
-                t0 = time.time()
+                t0 = time.perf_counter()
                 srv_set = servers if switching else (servers[init_idx],)
-                srs, accs, sw = [], [], []
-                for seed in SEEDS:
-                    streams = synthetic.device_streams(
-                        n, SAMPLES, dev.accuracy,
-                        [s.accuracy for s in srv_set], seed)
-                    spec = jaxsim.JaxSimSpec(
-                        scheduler="multitasc++", n_devices=n,
-                        samples_per_device=SAMPLES,
-                        model_switching=switching,
-                        server_init=init_idx if switching else 0)
-                    out = jaxsim.run(spec, streams,
-                                     np.full(n, dev.latency),
-                                     np.full(n, SLO), srv_set,
-                                     c_upper=np.array([0.8], np.float32))
-                    srs.append(float(out["sr"]))
-                    accs.append(float(out["accuracy"]))
-                    tr = np.asarray(out["traces"]["server_idx"])
-                    tr = tr[~np.isnan(tr)]
-                    sw.append(float((np.diff(tr) != 0).sum()) if len(tr) > 1
-                              else 0.0)
-                wall = (time.time() - t0) / len(SEEDS) * 1e6
+                streams = common.cached_streams(
+                    common.SEEDS, n, common.SAMPLES, dev.accuracy,
+                    [s.accuracy for s in srv_set])
+                spec = jaxsim.JaxSimSpec(
+                    scheduler="multitasc++", n_devices=n,
+                    samples_per_device=common.SAMPLES,
+                    model_switching=switching,
+                    server_init=init_idx if switching else 0)
+                out = jaxsim.run_sweep(spec, streams,
+                                       np.full(n, dev.latency),
+                                       np.full(n, SLO), srv_set,
+                                       c_upper=np.array([0.8], np.float32))
+                srs = np.asarray(out["sr"])
+                accs = np.asarray(out["accuracy"])
+                tr = np.asarray(out["traces"]["server_idx"])  # (seeds, W)
+                sw = [float((np.diff(r[~np.isnan(r)]) != 0).sum())
+                      for r in tr]  # NaN tail = windows after early exit
+                sw = np.asarray(sw)
+                wall = (time.perf_counter() - t0) / len(common.SEEDS) * 1e6
                 tag = "on" if switching else "off"
                 rows.append(Row(
                     f"fig17_switch/{init_name}/switching={tag}/n={n}", wall,
-                    f"sr={np.mean(srs):.2f};acc={np.mean(accs):.4f};"
-                    f"switches={np.mean(sw):.1f}"))
+                    f"sr={srs.mean():.2f};acc={accs.mean():.4f};"
+                    f"switches={sw.mean():.1f}"))
     return rows

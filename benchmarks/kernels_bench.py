@@ -15,12 +15,12 @@ from repro.kernels.rglru_scan import rglru_scan
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)  # compile
-    t0 = time.time()
+    jax.block_until_ready(fn(*args))  # compile AND finish before timing
+    t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run():

@@ -2,15 +2,25 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--only fig4`` runs a subset;
 ``--quick`` shrinks seeds/samples for smoke runs.
+
+``--json PATH`` (default ``BENCH_jaxsim.json`` under ``--quick``) records
+``{figure: {wall_s, n_points, n_compiles}}`` per executed figure so the
+perf trajectory of the sweep engine stays measurable across PRs.
 """
 import argparse
+import json
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_jaxsim.json",
+                    default=None, metavar="PATH",
+                    help="write per-figure {wall_s, n_points, n_compiles}"
+                         " (default on for --quick)")
     args = ap.parse_args()
 
     if args.quick:
@@ -18,12 +28,15 @@ def main() -> None:
         common.SEEDS = (0,)
         common.SAMPLES = 200
         common.DEVICE_COUNTS = (2, 25, 100)
+        if args.json is None:
+            args.json = "BENCH_jaxsim.json"
 
     from benchmarks import (ablation_components, fig4_homogeneous,
                             fig7_heavy_server, fig10_convergence,
                             fig11_heterogeneous, fig15_transformers,
                             fig17_switching, fig19_intermittent,
                             kernels_bench)
+    from repro.sim import jaxsim
     modules = {
         "fig4": fig4_homogeneous,
         "fig7": fig7_heavy_server,
@@ -35,13 +48,29 @@ def main() -> None:
         "ablation": ablation_components,
         "kernels": kernels_bench,
     }
+    bench = {}
     print("name,us_per_call,derived")
     for key, mod in modules.items():
         if args.only and args.only not in key:
             continue
-        for row in mod.run():
+        before = jaxsim.stats_snapshot()
+        t0 = time.perf_counter()
+        rows = mod.run()
+        wall = time.perf_counter() - t0
+        after = jaxsim.stats_snapshot()
+        bench[key] = {
+            "wall_s": round(wall, 3),
+            "n_points": after["points"] - before["points"],
+            "n_compiles": after["backend_compiles"] - before["backend_compiles"],
+        }
+        for row in rows:
             print(row.csv())
             sys.stdout.flush()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -23,14 +23,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch import shardings as sh
 from repro.launch.mesh import batch_axes_of
-from repro.models.common import MeshContext
+from repro.models.common import MeshContext, shard_map
 from repro.models.model import IGNORE, Model
 from repro.training import optimizer as opt
-
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
 
 MODEL = "model"
 

@@ -26,12 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import KeyGen, MeshContext, dense_init
-
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.models.common import KeyGen, MeshContext, dense_init, shard_map
 
 CAPACITY_FACTOR = 1.25
 

@@ -151,7 +151,21 @@ def _operands(line: str) -> List[str]:
                 cur = ""
             else:
                 cur += ch
-    return [o.lstrip("%") for o in out if o.startswith("%")]
+    # operand tokens may carry an inline type ("f32[32,128]{1,0} %name")
+    # or be bare ("%name"); keep the full token, extract names on demand
+    return [o for o in out if "%" in o]
+
+
+def _operand_name(token: str) -> str:
+    m = re.search(r"%([\w\.\-]+)", token)
+    return m.group(1) if m else ""
+
+
+def _operand_type(token: str, comp: "Computation") -> str:
+    """Inline operand type if present, else the recorded definition type."""
+    if _SHAPE.search(token.split("%")[0]):
+        return token.split("%")[0]
+    return comp.shapes.get(_operand_name(token), "")
 
 
 def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
@@ -164,8 +178,7 @@ def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
     ops = _operands(ins.line)
     k = 1
     if mdims and ops:
-        lhs_type = comp.shapes.get(ops[0], "")
-        lhs_dims = _shape_dims(lhs_type)
+        lhs_dims = _shape_dims(_operand_type(ops[0], comp))
         for idx in (mdims.group(1).split(",") if mdims.group(1) else []):
             i = int(idx)
             if i < len(lhs_dims):
@@ -173,7 +186,7 @@ def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
     flops = 2.0 * out_elems * k
     byts = _shape_bytes(ins.type_str)
     for o in ops[:2]:
-        byts += _shape_bytes(comp.shapes.get(o, ""))
+        byts += _shape_bytes(_operand_type(o, comp))
     return flops, byts
 
 
@@ -206,7 +219,7 @@ def analyze(hlo_text: str) -> HloStats:
                 stats.dot_bytes += b * mult
             elif any(ins.opcode.startswith(c) for c in COLLECTIVES):
                 out_b = _shape_bytes(ins.type_str)
-                in_b = sum(_shape_bytes(comp.shapes.get(o, ""))
+                in_b = sum(_shape_bytes(_operand_type(o, comp))
                            for o in _operands(ins.line))
                 byts = max(out_b, in_b) * mult
                 key = ins.opcode

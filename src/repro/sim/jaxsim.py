@@ -1,26 +1,84 @@
 """Vectorized closed-loop simulator: the full multi-device cascade as one
-``lax.scan`` over time ticks.
+jit-compiled window loop, batchable over sweep points with ``vmap``.
 
 Everything the event simulator (repro.sim.events) does — device sample
 streams, Eq. 3 forwarding decisions, the server request queue, dynamic
 batching over the paper's ladder, SLO window accounting, and the
 MultiTASC++ / MultiTASC / Static scheduler updates — runs inside a single
-jit-compiled scan with per-device state vectors, so sweeps over 100+
-devices x schedulers x seeds execute in seconds on one chip. The queue is
-a fixed-capacity ring buffer sized to the worst case (every sample
+compiled core with per-device state vectors, so sweeps over 100+ devices
+x schedulers x seeds execute in seconds on one chip. The queue is a
+fixed-capacity ring buffer sized to the worst case (every sample
 forwarded), so no event is ever dropped.
+
+Static/traced split
+-------------------
+A sweep point is described by a ``JaxSimSpec``, which the engine splits in
+two:
+
+* **static structure** (``JaxSimStatic``): the device-count bucket,
+  ``samples_per_device``, the tick/window grid derived from ``window``,
+  ``extra_time`` and the latency profile, queue capacity, and the number
+  of server models. Only these force a recompile — one compiled core
+  serves every sweep point that shares them.
+* **traced values**: everything calibrated or swept — ``a``,
+  ``sr_target``, ``init_threshold``, ``static_threshold``,
+  ``multitasc_step``, ``mult_growth``, ``c_lower``, the derived ``b_opt``
+  and ``server_init``, the server latency profile, and even the
+  *scheduler kind* and ``model_switching`` flag: the scheduler update is
+  a cheap per-window 3-way ``lax.switch``, so folding it into the traced
+  side costs nothing and lets all three schedulers share one core.
+
+To keep the static key coarse, the engine additionally:
+
+* pads the device axis up to a ``N_BUCKET`` multiple and threads a traced
+  ``n_real`` mask through every update/metric, so n=6 and n=99 hit the
+  same executable (padded devices have infinite latency and are inert);
+* pads the tier axis to ``MAX_TIERS`` (empty tiers are ignored by the
+  switching rule);
+* rounds the simulated duration up to a ``DURATION_QUANTUM`` grid and
+  runs the window loop as an early-exiting ``lax.while_loop`` that stops
+  as soon as every real device finished its stream and the server queue
+  drained — padding and the post-completion drain tail cost nothing.
+
+``run_sweep`` contract
+----------------------
+``run_sweep(specs, streams, dev_latency, slo, servers, ...)`` runs B
+sweep points in one call:
+
+* ``specs``: one ``JaxSimSpec`` (broadcast over the batch) or a sequence
+  of B specs that must share their static structure (a ``ValueError``
+  otherwise). Schedulers, thresholds, gains etc. may differ per point.
+* ``streams``: dict with ``confidence``/``correct_light`` of shape
+  ``(B, N, S)`` (or ``(N, S)``, broadcast) and ``correct_heavy`` of shape
+  ``(B, N, S, P)``; see ``synthetic.batched_device_streams``.
+* ``dev_latency``/``slo``/``tier_ids``/``offline_*``: ``(N,)`` shared or
+  ``(B, N)`` per-point; ``c_upper``: ``(n_tiers,)`` or ``(B, n_tiers)``.
+  The time grid (``dt``, tick counts) is computed from the pooled
+  latencies, so every point in one sweep must share its latency profile.
+* returns the same metric dict as ``run`` with a leading batch axis on
+  every leaf (``sr``: ``(B,)``, ``traces.thresh``: ``(B, n_windows)``,
+  ...). Trace rows for windows after the early exit are NaN.
+
+The core ``vmap``s the window loop over the batch axis and donates the
+stream buffers to the computation. Trace accumulation is window-wise: the
+outer while loop writes one trace row per window, with an inner
+``lax.scan`` over the ticks inside the window carrying only the simulator
+state — no per-tick NaN masking.
 
 Semantics vs. the event simulator (cross-validated in tests):
   * time is discretized at dt = min(device latency)/2; device completions
     and batch launches snap to tick boundaries (bias < dt << window T);
   * window SR attribution happens at batch *launch* (finish time is known
-    then); misattribution is bounded by one batch latency << T.
+    then); misattribution is bounded by one batch latency << T;
+  * scheduler updates stop at the early exit — final thresholds are the
+    values when the last sample drained, not after an idle tail.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence
+import warnings
+from typing import Dict, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +90,16 @@ from repro.core import multitascpp as mtpp
 from repro.core import switching
 
 MAX_POP = 64
+N_BUCKET = 128          # device axis pads up to a multiple of this
+MAX_TIERS = 4           # tier axis is padded to this fixed width
+DURATION_QUANTUM = 30.0  # simulated duration rounds up to this grid (s)
+
+SCHED_CODES = {"multitasc++": 0, "multitasc": 1, "static": 2}
+
+# per-point scalars that are traced inputs of the compiled core (stacked
+# on the sweep axis by run_sweep); structure lives in JaxSimStatic
+TRACED_FIELDS = ("a", "sr_target", "init_threshold", "static_threshold",
+                 "multitasc_step", "mult_growth", "c_lower")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,81 +120,238 @@ class JaxSimSpec:
     server_init: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class JaxSimStatic:
+    """The recompile key: structure only, no calibrated scalars."""
+    n_pad: int
+    samples_per_device: int
+    n_servers: int
+    dt: float
+    n_windows: int
+    ticks_per_window: int
+    cap: int
+
+
+@dataclasses.dataclass
+class SweepStats:
+    """Process-wide counters for benchmark/regression accounting."""
+    cores_built: int = 0        # distinct (static, vmapped) cores traced
+    backend_compiles: int = 0   # XLA backend_compile events (all of jax)
+    points: int = 0             # sweep points simulated
+
+
+stats = SweepStats()
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+def _on_jax_event(event: str, duration: float, **_) -> None:
+    if event == _COMPILE_EVENT:
+        stats.backend_compiles += 1
+
+
+try:  # compile counting is best-effort: cores_built remains the fallback
+    jax.monitoring.register_event_duration_secs_listener(_on_jax_event)
+except Exception:  # pragma: no cover - monitoring API unavailable
+    pass
+
+
+def stats_snapshot() -> Dict[str, int]:
+    return dataclasses.asdict(stats)
+
+
+def _static_of(spec: JaxSimSpec, n_servers: int, min_lat: float,
+               max_lat: float) -> JaxSimStatic:
+    dt = min_lat / 2.0
+    duration = max_lat * spec.samples_per_device + spec.extra_time
+    duration = -(-duration // DURATION_QUANTUM) * DURATION_QUANTUM
+    n_ticks = int(duration / dt) + 1
+    tpw = max(int(round(spec.window / dt)), 1)
+    n_pad = -(-spec.n_devices // N_BUCKET) * N_BUCKET
+    return JaxSimStatic(
+        n_pad=n_pad, samples_per_device=spec.samples_per_device,
+        n_servers=n_servers, dt=dt, n_windows=-(-n_ticks // tpw),
+        ticks_per_window=tpw,
+        cap=n_pad * spec.samples_per_device + MAX_POP)
+
+
+def _params_of(spec: JaxSimSpec, servers: Sequence[ServerProfile],
+               slo_min: float) -> Dict[str, np.ndarray]:
+    if spec.scheduler not in SCHED_CODES:
+        raise ValueError(f"unknown scheduler {spec.scheduler!r}")
+    p = {f: np.float32(getattr(spec, f)) for f in TRACED_FIELDS}
+    p["scheduler"] = np.int32(SCHED_CODES[spec.scheduler])
+    p["model_switching"] = np.int32(spec.model_switching)
+    p["n_real"] = np.int32(spec.n_devices)
+    p["b_opt"] = np.int32(mt.optimal_batch(servers[spec.server_init],
+                                           slo_min))
+    p["server_init"] = np.int32(spec.server_init)
+    return p
+
+
 def run(spec: JaxSimSpec, streams, dev_latency, slo, servers:
         Sequence[ServerProfile], *, tier_ids=None, c_upper=None,
         offline_start=None, offline_for=None):
-    """streams: dict of (N,S) numpy arrays (+ correct_heavy (N,S,P)).
+    """Single sweep point: ``run_sweep`` with B=1, batch axis stripped.
 
+    streams: dict of (N,S) numpy arrays (+ correct_heavy (N,S,P)).
     Returns dict of jnp metrics + window traces (already device-averaged).
-    Not itself jitted — the inner scan core is, cached per static shape.
     """
-    n, s = streams["confidence"].shape
-    dev_latency_np = np.broadcast_to(np.asarray(dev_latency, np.float32), (n,))
-    slo_np = np.broadcast_to(np.asarray(slo, np.float32), (n,))
-    tier_np = (np.zeros((n,), np.int32) if tier_ids is None
-               else np.asarray(tier_ids, np.int32))
-    n_tiers = int(tier_np.max()) + 1
-    c_upper_np = (np.full((n_tiers,), 0.8, np.float32) if c_upper is None
-                  else np.asarray(c_upper, np.float32))
+    out = run_sweep([spec], streams, dev_latency, slo, servers,
+                    tier_ids=tier_ids, c_upper=c_upper,
+                    offline_start=offline_start, offline_for=offline_for)
+    return jax.tree.map(lambda x: x[0], out)
 
-    conf = jnp.asarray(streams["confidence"], jnp.float32)
-    cl = jnp.asarray(streams["correct_light"], jnp.int32)
-    ch_np = np.asarray(streams["correct_heavy"])
-    if ch_np.ndim == 2:
-        ch_np = ch_np[:, :, None]
-    ch = jnp.asarray(ch_np, jnp.int32)
 
-    dt = float(dev_latency_np.min()) / 2.0
-    duration = float(dev_latency_np.max()) * spec.samples_per_device \
-        + spec.extra_time
-    n_ticks = int(duration / dt) + 1
-    tpw = max(int(round(spec.window / dt)), 1)
-    b_opt = mt.optimal_batch(servers[spec.server_init], float(slo_np.min()))
+def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
+              dev_latency, slo, servers: Sequence[ServerProfile], *,
+              tier_ids=None, c_upper=None, offline_start=None,
+              offline_for=None):
+    """Batched sweep: B points through one vmapped, jit-compiled core.
 
-    core = _make_core(spec, tuple(servers), n, s, n_tiers, dt, n_ticks, tpw,
-                      b_opt)
-    off_start = (np.full((n,), np.inf, np.float32) if offline_start is None
-                 else np.asarray(offline_start, np.float32))
-    off_for = (np.zeros((n,), np.float32) if offline_for is None
-               else np.asarray(offline_for, np.float32))
-    return core(conf, cl, ch, jnp.asarray(dev_latency_np),
-                jnp.asarray(slo_np), jnp.asarray(tier_np),
-                jnp.asarray(c_upper_np), jnp.asarray(off_start),
-                jnp.asarray(off_for))
+    See the module docstring for the full contract. All points must share
+    static structure; traced values (scheduler kind, thresholds, gains,
+    targets, server profile) vary freely without recompiling.
+    """
+    if isinstance(specs, JaxSimSpec):
+        specs = [specs]
+    specs = list(specs)
+    if not specs:
+        raise ValueError("run_sweep needs at least one spec")
+
+    conf = np.asarray(streams["confidence"], np.float32)
+    cl = np.asarray(streams["correct_light"], np.int32)
+    ch = np.asarray(streams["correct_heavy"], np.int32)
+    if conf.ndim == 2:
+        conf, cl, ch = conf[None], cl[None], ch[None]
+    if ch.ndim == 3:
+        ch = ch[..., None]
+    b = max(len(specs), conf.shape[0])
+    if len(specs) == 1 and b > 1:
+        specs = specs * b
+    if len(specs) != b:
+        raise ValueError(f"{len(specs)} specs for stream batch {conf.shape[0]}")
+    if conf.shape[0] == 1 and b > 1:
+        conf = np.broadcast_to(conf, (b,) + conf.shape[1:])
+        cl = np.broadcast_to(cl, (b,) + cl.shape[1:])
+        ch = np.broadcast_to(ch, (b,) + ch.shape[1:])
+
+    n, s = specs[0].n_devices, specs[0].samples_per_device
+    if conf.shape != (b, n, s):
+        raise ValueError(f"streams shape {conf.shape} != {(b, n, s)}")
+    bad = [(sp.n_devices, sp.samples_per_device) for sp in specs
+           if (sp.n_devices, sp.samples_per_device) != (n, s)]
+    if bad:  # bucketing would mask this: phantom devices dilute metrics
+        raise ValueError(
+            f"all specs must share (n_devices, samples_per_device)=({n}, {s});"
+            f" got {sorted(set(bad))}")
+
+    def per_point(x, fill, dtype, width, pad_fill=None):
+        arr = (np.full((width,), fill, dtype) if x is None
+               else np.atleast_1d(np.asarray(x, dtype)))
+        if arr.ndim == 1 and arr.shape[0] == 1 and width != 1:
+            arr = np.broadcast_to(arr, (width,))
+        arr = np.broadcast_to(arr, (b, arr.shape[-1])).astype(dtype)
+        if arr.shape[-1] < width:
+            pad = np.full((b, width - arr.shape[-1]),
+                          fill if pad_fill is None else pad_fill, dtype)
+            arr = np.concatenate([arr, pad], axis=-1)
+        return arr
+
+    dev_lat_real = per_point(dev_latency, 0.0, np.float32, n)
+    min_lat, max_lat = float(dev_lat_real.min()), float(dev_lat_real.max())
+    row_min = dev_lat_real.min(axis=1)
+    row_max = dev_lat_real.max(axis=1)
+    if (row_min != min_lat).any() or (row_max != max_lat).any():
+        # dt / tick counts come from the pooled profile; a point with a
+        # different min/max would silently run on the wrong time grid
+        raise ValueError(
+            "per-point dev_latency must share min/max across the batch "
+            f"(tick grid is pooled); got mins {np.unique(row_min)} "
+            f"maxs {np.unique(row_max)}")
+
+    statics = {_static_of(sp, len(servers), min_lat, max_lat)
+               for sp in specs}
+    if len(statics) != 1:
+        raise ValueError(
+            "run_sweep points must share static structure; got "
+            f"{len(statics)} distinct structures: {sorted(map(str, statics))}")
+    static = statics.pop()
+    n_pad = static.n_pad
+
+    def pad_streams(x):
+        if n_pad == n:
+            return x
+        shape = (b, n_pad) + x.shape[2:]
+        out = np.zeros(shape, x.dtype)
+        out[:, :n] = x
+        return out
+
+    # padded devices are inert: infinite latency -> never complete
+    dev_lat = per_point(dev_lat_real, 0.0, np.float32, n_pad,
+                        pad_fill=np.inf)
+    slo_b = per_point(slo, 0.0, np.float32, n_pad)
+    tier_b = per_point(tier_ids, 0, np.int32, n_pad)
+    if int(tier_b.max()) + 1 > MAX_TIERS:
+        raise ValueError(f"at most {MAX_TIERS} device tiers supported")
+    c_upper_b = per_point(c_upper, 0.8, np.float32, MAX_TIERS)
+    off_start_b = per_point(offline_start, np.inf, np.float32, n_pad)
+    off_for_b = per_point(offline_for, 0.0, np.float32, n_pad)
+
+    plist = [_params_of(sp, servers, float(slo_b[i, :n].min()))
+             for i, sp in enumerate(specs)]
+    params = {k: jnp.asarray(np.stack([p[k] for p in plist]))
+              for k in plist[0]}
+    srv = {
+        "base_lat": jnp.asarray([p.base_latency for p in servers],
+                                jnp.float32),
+        "scaling": jnp.asarray([p.batch_scaling for p in servers],
+                               jnp.float32),
+        "max_batch": jnp.asarray([p.max_batch for p in servers], jnp.int32),
+    }
+
+    core = _make_core(static)
+    stats.points += b
+    with warnings.catch_warnings():
+        # stream buffers are donated; on backends that can't alias them
+        # jax warns — harmless, the copy is what would have happened anyway
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        out = core(params, srv, jnp.array(pad_streams(conf)),
+                   jnp.array(pad_streams(cl)), jnp.array(pad_streams(ch)),
+                   jnp.asarray(dev_lat), jnp.asarray(slo_b),
+                   jnp.asarray(tier_b), jnp.asarray(c_upper_b),
+                   jnp.asarray(off_start_b), jnp.asarray(off_for_b))
+    for k in ("per_device_sr", "per_device_acc", "final_thresh"):
+        out[k] = np.asarray(out[k])[:, :n]
+    return out
 
 
 @functools.lru_cache(maxsize=256)
-def _make_core(spec: JaxSimSpec, servers, n, s, n_tiers, dt, n_ticks, tpw,
-               b_opt):
-    base_lat = jnp.asarray([p.base_latency for p in servers], jnp.float32)
-    scaling = jnp.asarray([p.batch_scaling for p in servers], jnp.float32)
-    max_batch = jnp.asarray([p.max_batch for p in servers], jnp.int32)
+def _make_core(static: JaxSimStatic):
+    stats.cores_built += 1
+    single = functools.partial(_run_core, static)
+    batched = jax.vmap(single, in_axes=(0, None) + (0,) * 9)
+    return jax.jit(batched, donate_argnums=(2, 3, 4))
+
+
+def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
+              c_upper, off_start, off_for):
+    n, s = static.n_pad, static.samples_per_device
+    dt, tpw, cap = static.dt, static.ticks_per_window, static.cap
+    base_lat, scaling = srv["base_lat"], srv["scaling"]
+    max_batch = srv["max_batch"]
     ladder = jnp.asarray(BATCH_LADDER, jnp.int32)
-    cap = n * s + MAX_POP  # worst case: everything forwarded
-    init_thresh = (spec.static_threshold if spec.scheduler == "static"
-                   else spec.init_threshold)
-
-    @jax.jit
-    def core(conf, cl, ch, dev_latency, slo, tier_ids, c_upper, off_start,
-             off_for):
-        return _run_core(spec, n, s, n_tiers, dt, n_ticks, tpw, b_opt,
-                         base_lat, scaling, max_batch, ladder, cap,
-                         init_thresh, len(servers), conf, cl, ch,
-                         dev_latency, slo, tier_ids, c_upper, off_start,
-                         off_for)
-
-    return core
-
-
-def _run_core(spec, n, s, n_tiers, dt, n_ticks, tpw, b_opt, base_lat,
-              scaling, max_batch, ladder, cap, init_thresh, n_servers, conf,
-              cl, ch, dev_latency, slo, tier_ids, c_upper, off_start,
-              off_for):
+    valid = jnp.arange(n) < params["n_real"]
+    n_real_f = params["n_real"].astype(jnp.float32)
+    init_thresh = jnp.where(params["scheduler"] == SCHED_CODES["static"],
+                            params["static_threshold"],
+                            params["init_threshold"])
 
     state = {
         "dev_next": dev_latency,
         "cursor": jnp.zeros((n,), jnp.int32),
-        "thresh": jnp.full((n,), init_thresh, jnp.float32),
+        "thresh": jnp.broadcast_to(init_thresh, (n,)).astype(jnp.float32),
         "mult": jnp.ones((n,), jnp.float32),
         "win_met": jnp.zeros((n,), jnp.int32),
         "win_total": jnp.zeros((n,), jnp.int32),
@@ -141,7 +366,7 @@ def _run_core(spec, n, s, n_tiers, dt, n_ticks, tpw, b_opt, base_lat,
         "tail": jnp.zeros((), jnp.int32),
         "busy_until": jnp.zeros((), jnp.float32),
         "last_batch": jnp.zeros((), jnp.int32),
-        "server_idx": jnp.asarray(spec.server_init, jnp.int32),
+        "server_idx": params["server_init"].astype(jnp.int32),
         "last_done_t": jnp.zeros((), jnp.float32),
     }
 
@@ -214,65 +439,88 @@ def _run_core(spec, n, s, n_tiers, dt, n_ticks, tpw, b_opt, base_lat,
         last_batch = jnp.where(can_pop, b, st["last_batch"])
         last_done_t = jnp.where(can_pop, finish, last_done_t)
 
+        return dict(
+            dev_next=dev_next, cursor=cursor, thresh=st["thresh"],
+            mult=st["mult"], win_met=win_met, win_total=win_total,
+            tot_met=tot_met, tot=tot, correct=correct, fwd=st_fwd,
+            q_start=q_start, q_dev=q_dev, q_samp=q_samp, head=head,
+            tail=tail, busy_until=busy_until, last_batch=last_batch,
+            server_idx=sidx, last_done_t=last_done_t), None
+
+    def window_body(carry):
+        st, traces, w = carry
+        st, _ = jax.lax.scan(tick, st, w * tpw + jnp.arange(tpw))
+
         # --- window boundary: scheduler + switching ----------------------
-        is_window = (i + 1) % tpw == 0
-        sr = jnp.where(win_total > 0,
-                       100.0 * win_met / jnp.maximum(win_total, 1), 100.0)
+        t_end = ((w + 1) * tpw).astype(jnp.float32) * dt
+        active = (~((t_end >= off_start) & (t_end < off_start + off_for))
+                  ) & valid
+        sr = jnp.where(st["win_total"] > 0,
+                       100.0 * st["win_met"] / jnp.maximum(st["win_total"], 1),
+                       100.0)
         thresh, mult = st["thresh"], st["mult"]
-        if spec.scheduler == "multitasc++":
+
+        def upd_multitascpp(_):
             upd = mtpp.update({"thresh": thresh, "mult": mult}, sr,
                               mtpp.MultiTASCPPConfig(
-                                  a=spec.a, sr_target=spec.sr_target,
-                                  mult_growth=spec.mult_growth),
+                                  a=params["a"],
+                                  sr_target=params["sr_target"],
+                                  mult_growth=params["mult_growth"]),
                               n_active=jnp.sum(active), active=active)
-            new_thresh, new_mult = upd["thresh"], upd["mult"]
-        elif spec.scheduler == "multitasc":
-            upd = mt.update({"thresh": thresh}, last_batch, b_opt,
-                            mt.MultiTASCConfig(step=spec.multitasc_step),
+            return upd["thresh"], upd["mult"]
+
+        def upd_multitasc(_):
+            upd = mt.update({"thresh": thresh}, st["last_batch"],
+                            params["b_opt"],
+                            mt.MultiTASCConfig(step=params["multitasc_step"]),
                             active=active)
-            new_thresh, new_mult = upd["thresh"], mult
-        else:  # static
-            new_thresh, new_mult = thresh, mult
-        thresh = jnp.where(is_window, new_thresh, thresh)
-        mult = jnp.where(is_window, new_mult, mult)
-        win_met = jnp.where(is_window & active, 0, win_met)
-        win_total = jnp.where(is_window & active, 0, win_total)
+            return upd["thresh"], mult
 
-        server_idx = sidx
-        if spec.model_switching:
-            sw = switching.decide(thresh, tier_ids, n_tiers, spec.c_lower,
-                                  c_upper, active=active)
-            server_idx = jnp.clip(sidx + jnp.where(is_window, sw, 0), 0,
-                                  n_servers - 1)
+        def upd_static(_):
+            return thresh, mult
 
-        new_state = dict(
-            dev_next=dev_next, cursor=cursor, thresh=thresh, mult=mult,
-            win_met=win_met, win_total=win_total, tot_met=tot_met, tot=tot,
-            correct=correct, fwd=st_fwd, q_start=q_start, q_dev=q_dev,
-            q_samp=q_samp, head=head, tail=tail, busy_until=busy_until,
-            last_batch=last_batch, server_idx=server_idx,
-            last_done_t=last_done_t)
-        trace = {
-            "thresh_mean": jnp.where(active, thresh, jnp.nan),
-            "sr_mean": sr.mean(),
-            "active_frac": active.mean(),
-            "server_idx": server_idx,
+        thresh, mult = jax.lax.switch(
+            params["scheduler"],
+            (upd_multitascpp, upd_multitasc, upd_static), None)
+        win_met = jnp.where(active, 0, st["win_met"])
+        win_total = jnp.where(active, 0, st["win_total"])
+
+        sw = switching.decide(thresh, tier_ids, MAX_TIERS,
+                              params["c_lower"], c_upper, active=active)
+        server_idx = jnp.clip(
+            st["server_idx"] + jnp.where(params["model_switching"] != 0,
+                                         sw, 0),
+            0, static.n_servers - 1)
+
+        st = dict(st, thresh=thresh, mult=mult, win_met=win_met,
+                  win_total=win_total, server_idx=server_idx)
+        row = {
+            "thresh": jnp.nanmean(jnp.where(active, thresh, jnp.nan)),
+            "sr": jnp.sum(jnp.where(valid, sr, 0.0)) / n_real_f,
+            "active": jnp.sum(active) / n_real_f,
+            "server_idx": server_idx.astype(jnp.float32),
         }
-        # emit traces only at window boundaries to keep ys small
-        return new_state, jax.tree.map(
-            lambda x: jnp.where(is_window, x, jnp.nan),
-            {"thresh": jnp.nanmean(trace["thresh_mean"]),
-             "sr": trace["sr_mean"],
-             "active": trace["active_frac"],
-             "server_idx": trace["server_idx"].astype(jnp.float32)})
+        traces = {k: traces[k].at[w].set(row[k]) for k in traces}
+        return st, traces, w + 1
 
-    final, traces = jax.lax.scan(tick, state, jnp.arange(n_ticks))
+    def window_cond(carry):
+        st, _, w = carry
+        drained = ((st["tail"] == st["head"])
+                   & jnp.all(jnp.where(valid, st["cursor"] >= s, True)))
+        return (w < static.n_windows) & ~drained
+
+    trace_init = {k: jnp.full((static.n_windows,), jnp.nan, jnp.float32)
+                  for k in ("thresh", "sr", "active", "server_idx")}
+    final, traces, _ = jax.lax.while_loop(
+        window_cond, window_body, (state, trace_init, jnp.zeros((), jnp.int32)))
+
     tot = jnp.maximum(final["tot"], 1)
+    per_acc = final["correct"] / tot
     return {
         "sr": 100.0 * final["tot_met"].sum() / jnp.maximum(final["tot"].sum(), 1),
         "per_device_sr": 100.0 * final["tot_met"] / tot,
-        "per_device_acc": final["correct"] / tot,
-        "accuracy": (final["correct"] / tot).mean(),
+        "per_device_acc": per_acc,
+        "accuracy": jnp.sum(jnp.where(valid, per_acc, 0.0)) / n_real_f,
         "throughput": final["tot"].sum() / jnp.maximum(final["last_done_t"], 1e-9),
         "forwarded_frac": final["fwd"].sum() / jnp.maximum(final["tot"].sum(), 1),
         "completed": final["tot"].sum(),
@@ -282,4 +530,4 @@ def _run_core(spec, n, s, n_tiers, dt, n_ticks, tpw, b_opt, base_lat,
     }
 
 
-run_jit = run  # the inner core is jitted and cached per shape
+run_jit = run  # the inner core is jitted and cached per static structure

@@ -103,3 +103,18 @@ def device_streams(n_devices: int, samples_per_device: int, light_accs,
         "correct_light": np.stack([s.correct_light for s in streams]),
         "correct_heavy": np.stack([s.correct_heavy for s in streams]),
     }
+
+
+def batched_device_streams(seeds, n_devices: int, samples_per_device: int,
+                           light_accs, heavy_acc):
+    """Stacked streams for a whole sweep in one call.
+
+    Returns dict of ``(len(seeds), n_devices, samples_per_device[, P])``
+    tensors whose per-seed slices are bitwise identical to
+    ``device_streams(..., seed)`` — the batch axis feeds
+    ``jaxsim.run_sweep`` directly.
+    """
+    per_seed = [device_streams(n_devices, samples_per_device, light_accs,
+                               heavy_acc, seed) for seed in seeds]
+    return {k: np.stack([s[k] for s in per_seed])
+            for k in ("confidence", "correct_light", "correct_heavy")}

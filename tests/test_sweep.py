@@ -1,0 +1,112 @@
+"""Batched sweep engine tests: run_sweep == serial run (bitwise), batched
+stream generation, static/traced recompile behaviour."""
+import numpy as np
+import pytest
+
+from repro.configs.cascade_tiers import DEVICE_PROFILES, SERVER_PROFILES
+from repro.sim import jaxsim, synthetic
+
+DP = DEVICE_PROFILES["low"]
+SP = SERVER_PROFILES["inceptionv3"]
+SEEDS = (0, 1, 2)
+N, SAMPLES = 8, 120
+
+
+def _args(n=N):
+    return np.full(n, DP.latency), np.full(n, 0.15)
+
+
+def test_batched_streams_match_per_seed():
+    batched = synthetic.batched_device_streams(SEEDS, N, SAMPLES,
+                                               DP.accuracy, SP.accuracy)
+    assert batched["confidence"].shape == (len(SEEDS), N, SAMPLES)
+    for i, seed in enumerate(SEEDS):
+        single = synthetic.device_streams(N, SAMPLES, DP.accuracy,
+                                          SP.accuracy, seed)
+        for k in ("confidence", "correct_light", "correct_heavy"):
+            np.testing.assert_array_equal(batched[k][i], single[k], err_msg=k)
+
+
+@pytest.mark.parametrize("sched", ["multitasc++", "multitasc", "static"])
+def test_sweep_matches_serial_bitwise(sched):
+    lat, slo = _args()
+    spec = jaxsim.JaxSimSpec(scheduler=sched, n_devices=N,
+                             samples_per_device=SAMPLES,
+                             static_threshold=0.6)
+    batched = synthetic.batched_device_streams(SEEDS, N, SAMPLES,
+                                               DP.accuracy, SP.accuracy)
+    sweep = jaxsim.run_sweep(spec, batched, lat, slo, (SP,))
+    for i, seed in enumerate(SEEDS):
+        streams = synthetic.device_streams(N, SAMPLES, DP.accuracy,
+                                           SP.accuracy, seed)
+        serial = jaxsim.run(spec, streams, lat, slo, (SP,))
+        for k in ("sr", "accuracy", "throughput"):
+            assert float(serial[k]) == float(sweep[k][i]), (k, seed)
+        np.testing.assert_array_equal(
+            np.asarray(serial["per_device_sr"]),
+            np.asarray(sweep["per_device_sr"][i]))
+
+
+def test_one_compile_serves_many_traced_scalars():
+    # unique static shape so the first call really does compile
+    n, samples = 7, 90
+    lat, slo = _args(n)
+    streams = synthetic.batched_device_streams((0,), n, samples,
+                                               DP.accuracy, SP.accuracy)
+
+    def sweep(**kw):
+        kw.setdefault("scheduler", "multitasc++")
+        spec = jaxsim.JaxSimSpec(n_devices=n, samples_per_device=samples,
+                                 **kw)
+        out = jaxsim.run_sweep(spec, streams, lat, slo, (SP,))
+        return float(np.asarray(out["sr"])[0])
+
+    sweep()
+    warm = jaxsim.stats_snapshot()
+    for kw in (dict(a=0.01), dict(static_threshold=0.9),
+               dict(a=0.02, sr_target=90.0), dict(init_threshold=0.1),
+               dict(mult_growth=0.0), dict(scheduler="multitasc"),
+               dict(scheduler="static", static_threshold=0.5)):
+        sweep(**kw)
+    after = jaxsim.stats_snapshot()
+    assert after["cores_built"] == warm["cores_built"]
+    assert after["backend_compiles"] == warm["backend_compiles"]
+
+
+def test_distinct_structure_rejected():
+    lat, slo = _args()
+    streams = synthetic.batched_device_streams((0, 1), N, SAMPLES,
+                                               DP.accuracy, SP.accuracy)
+    specs = [
+        jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=N,
+                          samples_per_device=SAMPLES),
+        jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=N,
+                          samples_per_device=SAMPLES, window=3.0),
+    ]
+    with pytest.raises(ValueError, match="static structure"):
+        jaxsim.run_sweep(specs, streams, lat, slo, (SP,))
+
+
+def test_heterogeneous_specs_batch_in_one_call():
+    """Different schedulers AND scalars per point, one call, per-point
+    results (the scheduler kind is traced, so all three share a core)."""
+    lat, slo = _args()
+    streams = synthetic.device_streams(N, SAMPLES, DP.accuracy,
+                                       SP.accuracy, 0)
+    tiled = {k: np.stack([v, v, v]) for k, v in streams.items()}
+    specs = [
+        jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=N,
+                          samples_per_device=SAMPLES, init_threshold=0.05),
+        jaxsim.JaxSimSpec(scheduler="multitasc", n_devices=N,
+                          samples_per_device=SAMPLES, init_threshold=0.95),
+        jaxsim.JaxSimSpec(scheduler="static", n_devices=N,
+                          samples_per_device=SAMPLES, static_threshold=0.7),
+    ]
+    out = jaxsim.run_sweep(specs, tiled, lat, slo, (SP,))
+    final = np.asarray(out["final_thresh"])
+    # both controllers act on the same stream but from different starts;
+    # each row must match its own serial run
+    for i, spec in enumerate(specs):
+        serial = jaxsim.run(spec, streams, lat, slo, (SP,))
+        np.testing.assert_array_equal(np.asarray(serial["final_thresh"]),
+                                      final[i])

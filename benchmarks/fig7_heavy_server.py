@@ -1,8 +1,8 @@
 """Paper Fig. 7/8/9: homogeneous scenario with the heavier, lower-
 throughput EfficientNetB3 server (max useful batch 16)."""
-from benchmarks.common import (DEVICE_COUNTS, DEVICE_PROFILES,
-                               SERVER_PROFILES, Row, derived_str, run_point,
-                               static_threshold_for)
+from benchmarks import common
+from benchmarks.common import (DEVICE_PROFILES, SERVER_PROFILES, Row,
+                               derived_str, run_point, static_threshold_for)
 
 SLO = 0.15
 
@@ -13,7 +13,9 @@ def run():
     static_t = static_threshold_for(dev, srv)
     rows = []
     for sched in ("multitasc++", "multitasc", "static"):
-        for n in DEVICE_COUNTS:
+        # by attribute, not by value: --quick / the golden fixture
+        # override common.DEVICE_COUNTS after this module is imported
+        for n in common.DEVICE_COUNTS:
             d = run_point(sched, n, dev, [srv], SLO, static_t=static_t)
             rows.append(Row(f"fig7_effb3/{sched}/n={n}", d["wall_us"],
                             derived_str(d)))

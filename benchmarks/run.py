@@ -4,8 +4,13 @@ Prints ``name,us_per_call,derived`` CSV. ``--only fig4`` runs a subset;
 ``--quick`` shrinks seeds/samples for smoke runs.
 
 ``--json PATH`` (default ``BENCH_jaxsim.json`` under ``--quick``) records
-``{figure: {wall_s, n_points, n_compiles}}`` per executed figure so the
-perf trajectory of the sweep engine stays measurable across PRs.
+``{figure: {wall_s, n_points, n_compiles, n_events}}`` per executed
+figure so the perf trajectory of the sweep engine stays measurable
+across PRs (``n_events`` = event-jump loop iterations: the quantity wall
+time is now proportional to, instead of simulated seconds).
+
+``tools/check_bench.py`` compares a fresh ``--json`` against the
+committed baseline (CI runs it on every push).
 """
 import argparse
 import json
@@ -62,6 +67,7 @@ def main() -> None:
             "wall_s": round(wall, 3),
             "n_points": after["points"] - before["points"],
             "n_compiles": after["backend_compiles"] - before["backend_compiles"],
+            "n_events": after["events"] - before["events"],
         }
         for row in rows:
             print(row.csv())

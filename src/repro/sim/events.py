@@ -7,6 +7,38 @@ the shared server queue, the server drains the queue with dynamic batching
 devices, and each device reports its windowed SLO satisfaction rate to the
 scheduler. Used as the ground-truth oracle for the vectorized JAX
 simulator (repro.sim.jaxsim) and for the smaller paper experiments.
+
+Event taxonomy
+--------------
+Four event kinds drive the simulation, processed from a priority heap
+keyed ``(time, kind priority, sequence)`` so simultaneous events resolve
+deterministically and in the same order as the vectorized event-jump
+core:
+
+=========  ========  ====================================================
+kind       priority  meaning
+=========  ========  ====================================================
+EV_DEV     0         a device finishes local inference on its next sample
+                     (classify locally or forward to the server queue)
+EV_ONLINE  1         a device returns from a sample-indexed offline gap
+EV_SRV     2         a server batch finishes (results return, next batch
+                     may start back-to-back)
+EV_WINDOW  3         SLO window boundary: per-device SR reports,
+                     scheduler update, model-switching decision
+=========  ========  ====================================================
+
+At one instant this yields: completions first, then batch finish +
+launch (seeing the just-forwarded samples), then the window update —
+exactly the in-instant processing order of ``jaxsim``'s event loop.
+
+Offline gaps come in two flavours: the original *sample-indexed* gap
+(``offline_at``/``offline_for``: the device drops out when its cursor
+reaches a sample index) and the *time-based* window used by ``jaxsim``
+(``offline_start_t``/``offline_for_t``: a completion falling inside
+``[start, start + for)`` is deferred to the end of the gap and the device
+is reported inactive at window boundaries inside the gap). The
+time-based flavour matches the vectorized core sample-for-sample, which
+is what the differential harness (tests/test_differential.py) relies on.
 """
 from __future__ import annotations
 
@@ -22,6 +54,12 @@ from repro.configs.cascade_tiers import (BATCH_LADDER, DeviceProfile,
 from repro.core import switching
 from repro.core.multitasc import MultiTASC
 from repro.sim.synthetic import SampleStream
+
+# event kinds, in tie-break priority order (see module docstring)
+EV_DEV = 0      # device completion
+EV_ONLINE = 1   # device back online (sample-indexed offline mode)
+EV_SRV = 2      # server batch finish
+EV_WINDOW = 3   # SLO window boundary
 
 
 @dataclasses.dataclass
@@ -39,7 +77,15 @@ class DeviceRuntime:
     forwarded: int = 0
     active: bool = True
     offline_at: Optional[int] = None      # go offline at this sample index
-    offline_for: float = 0.0              # seconds
+    offline_for: float = 0.0              # seconds (sample-indexed mode)
+    offline_start_t: Optional[float] = None  # time-based offline window (s)
+    offline_for_t: float = 0.0               # its duration (s)
+
+    def offline_during(self, t: float) -> bool:
+        """Is ``t`` inside the time-based offline window?"""
+        return (self.offline_start_t is not None
+                and self.offline_start_t <= t
+                < self.offline_start_t + self.offline_for_t)
 
 
 @dataclasses.dataclass
@@ -52,6 +98,11 @@ class SimResult:
     forwarded_frac: float
     timeline: Dict[str, List]      # window-resolution traces
     server_model_time: np.ndarray  # seconds spent on each server profile
+    # heap pops processed, ALL kinds including EV_WINDOW/EV_ONLINE — a
+    # different quantity from jaxsim's n_events (inner event-loop
+    # iterations, which exclude window boundaries and may merge a
+    # completion cluster with a launch); don't cross-compare the two
+    n_events: int = 0
 
 
 def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
@@ -71,21 +122,22 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
 
     heap: list = []
     seq = 0
+    n_events = 0
 
     def push(t, kind, payload=None):
         nonlocal seq
-        heapq.heappush(heap, (t, seq, kind, payload))
+        heapq.heappush(heap, (t, kind, seq, payload))
         seq += 1
 
     for i, dev in enumerate(devices):
-        push(dev.profile.latency, "dev", i)
-    push(window, "window", None)
+        push(dev.profile.latency, EV_DEV, i)
+    push(window, EV_WINDOW, None)
 
     queue: deque = deque()    # (start_time, device_id, sample_idx)
     completed = 0
     last_t = 0.0
     timeline = {"t": [], "thresholds": [], "sr": [], "active": [],
-                "accuracy": [], "server_idx": []}
+                "accuracy": [], "server_idx": [], "forwarded": []}
     win_sr_last = np.full(n, 100.0)
 
     def record_completion(dev: DeviceRuntime, latency: float, correct: int):
@@ -112,86 +164,113 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
         lat = prof.batch_latency(b)
         server_time[server_idx] += lat
         server_busy = True
-        push(t + lat, "srv", (batch, server_idx))
+        push(t + lat, EV_SRV, (batch, server_idx))
+
+    def on_device(t, i):
+        dev = devices[i]
+        if dev.cursor >= len(dev.stream):
+            return
+        if dev.offline_at is not None and dev.cursor >= dev.offline_at:
+            dev.offline_at = None
+            dev.active = False
+            push(t + dev.offline_for, EV_ONLINE, i)
+            return
+        if dev.offline_during(t):
+            # time-based offline: the completion fires when the device
+            # returns; the sample is not dropped (jaxsim defer semantics)
+            push(dev.offline_start_t + dev.offline_for_t, EV_DEV, i)
+            return
+        j = dev.cursor
+        dev.cursor += 1
+        if dev.stream.confidence[j] >= dev.threshold:  # Eq. 3: local
+            record_completion(dev, dev.profile.latency,
+                              int(dev.stream.correct_light[j]))
+        else:
+            dev.forwarded += 1
+            queue.append((t - dev.profile.latency, i, j))
+            # the launch attempt happens in the main loop once every
+            # same-instant completion has enqueued (simultaneous arrivals
+            # must form one batch, as in the vectorized core)
+        if dev.cursor < len(dev.stream):
+            push(t + dev.profile.latency, EV_DEV, i)
+
+    def on_online(t, i):
+        devices[i].active = True
+        if devices[i].cursor < len(devices[i].stream):
+            push(t + devices[i].profile.latency, EV_DEV, i)
+
+    def on_server(t, payload):
+        nonlocal server_busy
+        batch, sidx = payload
+        server_busy = False
+        for (start, i, j) in batch:
+            dev = devices[i]
+            record_completion(dev, t - start,
+                              int(dev.stream.correct_heavy[j, sidx]))
+        try_start_batch(t)
+
+    def on_window(t):
+        nonlocal server_idx
+        active = np.array([d.active and not d.offline_during(t)
+                           for d in devices])
+        if hasattr(scheduler, "set_active"):
+            scheduler.set_active(active)   # n_active drives Alg. 1 growth
+        for i, dev in enumerate(devices):
+            if not active[i]:
+                continue
+            sr = 100.0 if dev.win_total == 0 else \
+                100.0 * dev.win_met / dev.win_total
+            win_sr_last[i] = sr
+            dev.win_met = 0
+            dev.win_total = 0
+            dev.threshold = scheduler.report(i, sr)
+        if isinstance(scheduler, MultiTASC):
+            scheduler.on_window(active=active)
+            th = np.asarray(scheduler.thresholds())
+            for i, dev in enumerate(devices):
+                dev.threshold = float(th[i])
+        if model_switching:
+            th = np.array([d.threshold for d in devices])
+            s = int(switching.decide(th, tier_ids, n_tiers, c_lower,
+                                     c_upper, active=active))
+            if s == -1 and server_idx > 0:
+                server_idx -= 1     # faster model
+            elif s == 1 and server_idx < len(servers) - 1:
+                server_idx += 1     # heavier model
+        timeline["t"].append(t)
+        timeline["thresholds"].append([d.threshold for d in devices])
+        timeline["sr"].append(win_sr_last.copy())
+        timeline["active"].append(float(active.mean()))
+        accs = [d.correct / d.total if d.total else 1.0 for d in devices]
+        timeline["accuracy"].append(float(np.mean(accs)))
+        timeline["server_idx"].append(server_idx)
+        timeline["forwarded"].append(sum(d.forwarded for d in devices))
+
+        if any(d.cursor < len(d.stream) for d in devices) or queue \
+                or server_busy:
+            push(t + window, EV_WINDOW, None)
 
     while heap:
-        t, _, kind, payload = heapq.heappop(heap)
+        t, kind, _, payload = heapq.heappop(heap)
         if t > max_time:
             break
         last_t = max(last_t, t)
+        n_events += 1
 
-        if kind == "dev":
-            i = payload
-            dev = devices[i]
-            if dev.cursor >= len(dev.stream):
-                continue
-            if dev.offline_at is not None and dev.cursor >= dev.offline_at:
-                dev.offline_at = None
-                dev.active = False
-                push(t + dev.offline_for, "online", i)
-                continue
-            j = dev.cursor
-            dev.cursor += 1
-            if dev.stream.confidence[j] >= dev.threshold:  # Eq. 3: local
-                record_completion(dev, dev.profile.latency,
-                                  int(dev.stream.correct_light[j]))
-            else:
-                dev.forwarded += 1
-                queue.append((t - dev.profile.latency, i, j))
+        if kind == EV_DEV:
+            on_device(t, payload)
+            # launch only after the whole same-instant completion cluster
+            # has been processed: a fleet of identical-latency devices
+            # forwarding at the same t forms ONE batch (the in-instant
+            # order documented above), not a b=1 batch plus stragglers
+            if not heap or heap[0][0] != t or heap[0][1] != EV_DEV:
                 try_start_batch(t)
-            if dev.cursor < len(dev.stream):
-                push(t + dev.profile.latency, "dev", i)
-
-        elif kind == "online":
-            i = payload
-            devices[i].active = True
-            if devices[i].cursor < len(devices[i].stream):
-                push(t + devices[i].profile.latency, "dev", i)
-
-        elif kind == "srv":
-            batch, sidx = payload
-            server_busy = False
-            for (start, i, j) in batch:
-                dev = devices[i]
-                record_completion(dev, t - start,
-                                  int(dev.stream.correct_heavy[j, sidx]))
-            try_start_batch(t)
-
-        elif kind == "window":
-            active = np.array([d.active for d in devices])
-            for i, dev in enumerate(devices):
-                if not dev.active:
-                    continue
-                sr = 100.0 if dev.win_total == 0 else \
-                    100.0 * dev.win_met / dev.win_total
-                win_sr_last[i] = sr
-                dev.win_met = 0
-                dev.win_total = 0
-                dev.threshold = scheduler.report(i, sr)
-            if isinstance(scheduler, MultiTASC):
-                scheduler.on_window(active=active)
-                th = np.asarray(scheduler.thresholds())
-                for i, dev in enumerate(devices):
-                    dev.threshold = float(th[i])
-            if model_switching:
-                th = np.array([d.threshold for d in devices])
-                s = int(switching.decide(th, tier_ids, n_tiers, c_lower,
-                                         c_upper, active=active))
-                if s == -1 and server_idx > 0:
-                    server_idx -= 1     # faster model
-                elif s == 1 and server_idx < len(servers) - 1:
-                    server_idx += 1     # heavier model
-            timeline["t"].append(t)
-            timeline["thresholds"].append([d.threshold for d in devices])
-            timeline["sr"].append(win_sr_last.copy())
-            timeline["active"].append(float(active.mean()))
-            accs = [d.correct / d.total if d.total else 1.0 for d in devices]
-            timeline["accuracy"].append(float(np.mean(accs)))
-            timeline["server_idx"].append(server_idx)
-
-            if any(d.cursor < len(d.stream) for d in devices) or queue \
-                    or server_busy:
-                push(t + window, "window", None)
+        elif kind == EV_ONLINE:
+            on_online(t, payload)
+        elif kind == EV_SRV:
+            on_server(t, payload)
+        elif kind == EV_WINDOW:
+            on_window(t)
 
     per_sr = np.array([
         100.0 * d.met / d.total if d.total else 100.0 for d in devices])
@@ -208,6 +287,7 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
         forwarded_frac=float(fwd / max(total, 1)),
         timeline=timeline,
         server_model_time=server_time,
+        n_events=n_events,
     )
 
 

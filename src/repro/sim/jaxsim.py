@@ -10,23 +10,64 @@ x schedulers x seeds execute in seconds on one chip. The queue is a
 fixed-capacity ring buffer sized to the worst case (every sample
 forwarded), so no event is ever dropped.
 
+Time model: event jumps, not a tick grid
+----------------------------------------
+The simulator is event-driven. Each iteration of the inner loop advances
+``t`` directly to the next event time
+
+    t_next = min( next device completion over the fleet,
+                  server batch finish (only when the queue is non-empty) )
+
+and processes *every* state transition scheduled at that instant: all
+device completions (local classification or forwarding), then — if the
+server is free and the queue non-empty — one batch launch at exactly
+``t_next``. Window-boundary work (scheduler update via ``lax.switch``,
+model switching, SR window reset, trace row) runs after all events with
+``t <= (w+1) * window`` have been consumed, so an event landing exactly
+on a boundary is attributed to the closing window and the window update
+sees its effect — the deterministic resolution order for simultaneous
+events is: device completions, then batch finish + launch, then the
+window boundary.
+
+Consequences of the event-jump core (vs. the old ``dt = min latency / 2``
+tick grid):
+
+* simulator cost is proportional to the number of *events*, not to the
+  simulated duration: idle stretches and drain tails cost zero
+  iterations, and a heterogeneous fleet with one fast device no longer
+  pays a fine grid for everyone;
+* completions and batch launches happen at exact float32 times — there
+  is no tick-snap bias. In particular a batch can never launch before
+  the completion that filled it (the old grid could decide a launch at
+  ``t - dt``); launches are back-to-back with the previous batch when
+  the queue is backed up, and instantaneous on arrival when the server
+  is idle;
+* the inner loop is a ``lax.while_loop`` bounded by the static
+  ``max_events_per_window`` cap (a safety valve, not a cost: it bounds
+  *possible* iterations at 2 * n_pad * samples — one completion plus at
+  most one launch per sample — while the loop only runs actual events).
+
 Static/traced split
 -------------------
 A sweep point is described by a ``JaxSimSpec``, which the engine splits in
 two:
 
 * **static structure** (``JaxSimStatic``): the device-count bucket,
-  ``samples_per_device``, the tick/window grid derived from ``window``,
-  ``extra_time`` and the latency profile, queue capacity, and the number
-  of server models. Only these force a recompile — one compiled core
-  serves every sweep point that shares them.
+  ``samples_per_device``, the window length and window count derived from
+  ``window``, ``extra_time`` and the slowest device, queue capacity, the
+  events-per-window cap, and the number of server models. Only these
+  force a recompile — one compiled core serves every sweep point that
+  shares them.
 * **traced values**: everything calibrated or swept — ``a``,
   ``sr_target``, ``init_threshold``, ``static_threshold``,
   ``multitasc_step``, ``mult_growth``, ``c_lower``, the derived ``b_opt``
-  and ``server_init``, the server latency profile, and even the
-  *scheduler kind* and ``model_switching`` flag: the scheduler update is
-  a cheap per-window 3-way ``lax.switch``, so folding it into the traced
-  side costs nothing and lets all three schedulers share one core.
+  and ``server_init``, the server latency profile, the *per-device
+  latency and SLO vectors* (the event core has no latency-derived grid,
+  so latency profiles vary freely inside one compiled core), and even
+  the *scheduler kind* and ``model_switching`` flag: the scheduler
+  update is a cheap per-window 3-way ``lax.switch``, so folding it into
+  the traced side costs nothing and lets all three schedulers share one
+  core.
 
 To keep the static key coarse, the engine additionally:
 
@@ -53,23 +94,30 @@ sweep points in one call:
   ``(B, N, S, P)``; see ``synthetic.batched_device_streams``.
 * ``dev_latency``/``slo``/``tier_ids``/``offline_*``: ``(N,)`` shared or
   ``(B, N)`` per-point; ``c_upper``: ``(n_tiers,)`` or ``(B, n_tiers)``.
-  The time grid (``dt``, tick counts) is computed from the pooled
-  latencies, so every point in one sweep must share its latency profile.
+  Latency profiles may differ freely across points: the simulated
+  duration (and thus the window count) is derived from the pooled
+  slowest device, and points that finish earlier early-exit.
 * returns the same metric dict as ``run`` with a leading batch axis on
   every leaf (``sr``: ``(B,)``, ``traces.thresh``: ``(B, n_windows)``,
-  ...). Trace rows for windows after the early exit are NaN.
+  ...), plus ``n_events`` — the number of event-loop iterations per
+  point. Trace rows for windows after the early exit are NaN.
 
 The core ``vmap``s the window loop over the batch axis and donates the
 stream buffers to the computation. Trace accumulation is window-wise: the
-outer while loop writes one trace row per window, with an inner
-``lax.scan`` over the ticks inside the window carrying only the simulator
-state — no per-tick NaN masking.
+outer while loop writes one trace row per window (mean threshold, window
+SR, active fraction, server index, cumulative forwarded count, running
+accuracy), with an inner event-jump ``lax.while_loop`` inside the window
+carrying only the simulator state.
 
-Semantics vs. the event simulator (cross-validated in tests):
-  * time is discretized at dt = min(device latency)/2; device completions
-    and batch launches snap to tick boundaries (bias < dt << window T);
-  * window SR attribution happens at batch *launch* (finish time is known
-    then); misattribution is bounded by one batch latency << T;
+Semantics vs. the event simulator (cross-validated in
+tests/test_differential.py):
+  * event times are exact (float32) — there is no grid bias; remaining
+    differences vs. the float64 reference sim are rounding-level;
+  * window SR attribution happens at batch *launch* (finish time is
+    known then); misattribution is bounded by one batch latency << T;
+  * a device whose completion falls inside its offline window completes
+    at the end of the offline window (the reference sim re-schedules the
+    sample the same way for time-based offline);
   * scheduler updates stop at the early exit — final thresholds are the
     values when the last sample drained, not after an idle tail.
 """
@@ -101,6 +149,8 @@ SCHED_CODES = {"multitasc++": 0, "multitasc": 1, "static": 2}
 TRACED_FIELDS = ("a", "sr_target", "init_threshold", "static_threshold",
                  "multitasc_step", "mult_growth", "c_lower")
 
+TRACE_KEYS = ("thresh", "sr", "active", "server_idx", "fwd", "acc")
+
 
 @dataclasses.dataclass(frozen=True)
 class JaxSimSpec:
@@ -122,13 +172,18 @@ class JaxSimSpec:
 
 @dataclasses.dataclass(frozen=True)
 class JaxSimStatic:
-    """The recompile key: structure only, no calibrated scalars."""
+    """The recompile key: structure only, no calibrated scalars.
+
+    The event-jump core has no latency-derived tick grid, so the key is
+    coarser than it used to be: latency profiles are fully traced and
+    only the window length / window count / bucket sizes remain static.
+    """
     n_pad: int
     samples_per_device: int
     n_servers: int
-    dt: float
+    window: float
     n_windows: int
-    ticks_per_window: int
+    max_events_per_window: int   # safety cap on the inner event loop
     cap: int
 
 
@@ -138,6 +193,7 @@ class SweepStats:
     cores_built: int = 0        # distinct (static, vmapped) cores traced
     backend_compiles: int = 0   # XLA backend_compile events (all of jax)
     points: int = 0             # sweep points simulated
+    events: int = 0             # event-loop iterations across all points
 
 
 stats = SweepStats()
@@ -160,18 +216,19 @@ def stats_snapshot() -> Dict[str, int]:
     return dataclasses.asdict(stats)
 
 
-def _static_of(spec: JaxSimSpec, n_servers: int, min_lat: float,
+def _static_of(spec: JaxSimSpec, n_servers: int,
                max_lat: float) -> JaxSimStatic:
-    dt = min_lat / 2.0
     duration = max_lat * spec.samples_per_device + spec.extra_time
     duration = -(-duration // DURATION_QUANTUM) * DURATION_QUANTUM
-    n_ticks = int(duration / dt) + 1
-    tpw = max(int(round(spec.window / dt)), 1)
     n_pad = -(-spec.n_devices // N_BUCKET) * N_BUCKET
+    # every event-loop iteration consumes a device completion and/or
+    # launches a batch over >= 1 queued sample, so 2 * samples + slack
+    # bounds the whole sim; per-window it is a pure safety valve
     return JaxSimStatic(
         n_pad=n_pad, samples_per_device=spec.samples_per_device,
-        n_servers=n_servers, dt=dt, n_windows=-(-n_ticks // tpw),
-        ticks_per_window=tpw,
+        n_servers=n_servers, window=float(spec.window),
+        n_windows=int(-(-duration // spec.window)),
+        max_events_per_window=2 * n_pad * spec.samples_per_device + MAX_POP,
         cap=n_pad * spec.samples_per_device + MAX_POP)
 
 
@@ -211,7 +268,8 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
 
     See the module docstring for the full contract. All points must share
     static structure; traced values (scheduler kind, thresholds, gains,
-    targets, server profile) vary freely without recompiling.
+    targets, latency profiles, server profile) vary freely without
+    recompiling.
     """
     if isinstance(specs, JaxSimSpec):
         specs = [specs]
@@ -259,19 +317,11 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
         return arr
 
     dev_lat_real = per_point(dev_latency, 0.0, np.float32, n)
-    min_lat, max_lat = float(dev_lat_real.min()), float(dev_lat_real.max())
-    row_min = dev_lat_real.min(axis=1)
-    row_max = dev_lat_real.max(axis=1)
-    if (row_min != min_lat).any() or (row_max != max_lat).any():
-        # dt / tick counts come from the pooled profile; a point with a
-        # different min/max would silently run on the wrong time grid
-        raise ValueError(
-            "per-point dev_latency must share min/max across the batch "
-            f"(tick grid is pooled); got mins {np.unique(row_min)} "
-            f"maxs {np.unique(row_max)}")
+    # the window count covers the slowest device of the whole batch;
+    # faster points just early-exit sooner (latencies are fully traced)
+    max_lat = float(dev_lat_real.max())
 
-    statics = {_static_of(sp, len(servers), min_lat, max_lat)
-               for sp in specs}
+    statics = {_static_of(sp, len(servers), max_lat) for sp in specs}
     if len(statics) != 1:
         raise ValueError(
             "run_sweep points must share static structure; got "
@@ -300,8 +350,7 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
 
     plist = [_params_of(sp, servers, float(slo_b[i, :n].min()))
              for i, sp in enumerate(specs)]
-    params = {k: jnp.asarray(np.stack([p[k] for p in plist]))
-              for k in plist[0]}
+    params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
     srv = {
         "base_lat": jnp.asarray([p.base_latency for p in servers],
                                 jnp.float32),
@@ -310,20 +359,33 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
         "max_batch": jnp.asarray([p.max_batch for p in servers], jnp.int32),
     }
 
-    core = _make_core(static)
     stats.points += b
+    arrays = (pad_streams(conf), pad_streams(cl), pad_streams(ch),
+              dev_lat, slo_b, tier_b, c_upper_b, off_start_b, off_for_b)
     with warnings.catch_warnings():
         # stream buffers are donated; on backends that can't alias them
         # jax warns — harmless, the copy is what would have happened anyway
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
-        out = core(params, srv, jnp.array(pad_streams(conf)),
-                   jnp.array(pad_streams(cl)), jnp.array(pad_streams(ch)),
-                   jnp.asarray(dev_lat), jnp.asarray(slo_b),
-                   jnp.asarray(tier_b), jnp.asarray(c_upper_b),
-                   jnp.asarray(off_start_b), jnp.asarray(off_for_b))
+        if b == 1:
+            # B=1 skips vmap: the batched while_loop pays a per-iteration
+            # select over the whole carry even for a single lane, roughly
+            # doubling the cost of the event loop (results are bitwise
+            # identical either way — see test_sweep_matches_serial_bitwise).
+            # Indexing/expanding happens in numpy so no throwaway jit ops
+            # pollute the compile counters.
+            core = _make_core_single(static)
+            out = core({k: jnp.asarray(v[0]) for k, v in params.items()},
+                       srv, *(jnp.asarray(a[0]) for a in arrays))
+            out = jax.tree.map(lambda x: np.asarray(x)[None], out)
+        else:
+            core = _make_core(static)
+            out = core({k: jnp.asarray(v) for k, v in params.items()},
+                       srv, *(jnp.asarray(a) for a in arrays))
     for k in ("per_device_sr", "per_device_acc", "final_thresh"):
         out[k] = np.asarray(out[k])[:, :n]
+    out["n_events"] = np.asarray(out["n_events"])
+    stats.events += int(out["n_events"].sum())
     return out
 
 
@@ -335,10 +397,17 @@ def _make_core(static: JaxSimStatic):
     return jax.jit(batched, donate_argnums=(2, 3, 4))
 
 
+@functools.lru_cache(maxsize=256)
+def _make_core_single(static: JaxSimStatic):
+    stats.cores_built += 1
+    return jax.jit(functools.partial(_run_core, static),
+                   donate_argnums=(2, 3, 4))
+
+
 def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
               c_upper, off_start, off_for):
     n, s = static.n_pad, static.samples_per_device
-    dt, tpw, cap = static.dt, static.ticks_per_window, static.cap
+    window, cap = static.window, static.cap
     base_lat, scaling = srv["base_lat"], srv["scaling"]
     max_batch = srv["max_batch"]
     ladder = jnp.asarray(BATCH_LADDER, jnp.int32)
@@ -347,9 +416,18 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
     init_thresh = jnp.where(params["scheduler"] == SCHED_CODES["static"],
                             params["static_threshold"],
                             params["init_threshold"])
+    off_end = off_start + off_for
+
+    def defer_offline(t_complete):
+        # a completion falling inside the device's offline window fires
+        # when the device comes back online (the sample is not dropped)
+        offline = (t_complete >= off_start) & (t_complete < off_end)
+        return jnp.where(offline, off_end, t_complete)
 
     state = {
-        "dev_next": dev_latency,
+        "t": jnp.zeros((), jnp.float32),
+        "n_events": jnp.zeros((), jnp.int32),
+        "dev_next": defer_offline(dev_latency),
         "cursor": jnp.zeros((n,), jnp.int32),
         "thresh": jnp.broadcast_to(init_thresh, (n,)).astype(jnp.float32),
         "mult": jnp.ones((n,), jnp.float32),
@@ -370,12 +448,23 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         "last_done_t": jnp.zeros((), jnp.float32),
     }
 
-    def tick(st, i):
-        t = (i + 1).astype(jnp.float32) * dt
-        active = ~((t >= off_start) & (t < off_start + off_for))
+    def next_event_t(st):
+        # next device completion; padded / finished devices sit at +inf
+        t_dev = jnp.min(jnp.where(st["cursor"] < s, st["dev_next"],
+                                  jnp.inf))
+        # the server matters only while a batch is in flight AND samples
+        # wait behind it: launches otherwise happen inside the event that
+        # enqueued the triggering sample, and an in-flight batch over an
+        # empty queue changes nothing when it lands (SR attribution is at
+        # launch)
+        qlen = st["tail"] - st["head"]
+        t_srv = jnp.where((st["busy_until"] > st["t"]) & (qlen > 0),
+                          st["busy_until"], jnp.inf)
+        return jnp.minimum(t_dev, t_srv)
 
-        # --- device completions -----------------------------------------
-        done = (st["dev_next"] <= t) & active & (st["cursor"] < s)
+    def event_step(st, t):
+        # --- device completions at exactly this instant -------------------
+        done = (st["dev_next"] <= t) & (st["cursor"] < s)
         cj = jnp.clip(st["cursor"], 0, s - 1)
         conf_j = conf[jnp.arange(n), cj]
         local = conf_j >= st["thresh"]          # Eq. 3
@@ -401,12 +490,12 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         tail = st["tail"] + jnp.sum(fwd_mask)
 
         cursor = st["cursor"] + done
-        dev_next = jnp.where(done, st["dev_next"] + dev_latency,
-                             jnp.where(~active & (st["dev_next"] <= t),
-                                       t + dt, st["dev_next"]))
+        dev_next = jnp.where(done,
+                             defer_offline(st["dev_next"] + dev_latency),
+                             st["dev_next"])
         last_done_t = jnp.where(jnp.any(comp_local), t, st["last_done_t"])
 
-        # --- server dynamic batching -------------------------------------
+        # --- server dynamic batching --------------------------------------
         qlen = tail - st["head"]
         can_pop = (t >= st["busy_until"]) & (qlen > 0)
         sidx = st["server_idx"]
@@ -415,17 +504,14 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         lanes = jnp.arange(MAX_POP)
         take = (lanes < b) & can_pop
         qidx = (st["head"] + lanes) % cap
-        starts = q_start[qidx]          # updated arrays: same-tick entries
+        starts = q_start[qidx]          # updated arrays: same-event entries
         devs = jnp.where(take, q_dev[qidx], 0)
         samps = q_samp[qidx]
         lat_b = base_lat[sidx] * (1.0 + scaling[sidx] * (b - 1).astype(jnp.float32))
-        # exact launch time: back-to-back with the previous batch (the tick
-        # grid only gates the *decision*, not the start time), but never
-        # before the popped samples were actually enqueued.
-        enq_t = jnp.where(take, starts + dev_latency[devs], -jnp.inf)
-        launch_t = jnp.maximum(jnp.maximum(st["busy_until"], t - dt),
-                               enq_t.max())
-        finish = launch_t + lat_b
+        # exact launch: t is the batch-finish time when the queue was
+        # backed up, or the arrival of the sample that made it non-empty —
+        # by construction never before any popped sample was enqueued
+        finish = t + lat_b
         latency = finish - starts
         met_srv = (latency <= slo[devs]) & take
         win_met = win_met.at[devs].add(met_srv)
@@ -440,21 +526,36 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         last_done_t = jnp.where(can_pop, finish, last_done_t)
 
         return dict(
+            t=t, n_events=st["n_events"] + 1,
             dev_next=dev_next, cursor=cursor, thresh=st["thresh"],
             mult=st["mult"], win_met=win_met, win_total=win_total,
             tot_met=tot_met, tot=tot, correct=correct, fwd=st_fwd,
             q_start=q_start, q_dev=q_dev, q_samp=q_samp, head=head,
             tail=tail, busy_until=busy_until, last_batch=last_batch,
-            server_idx=sidx, last_done_t=last_done_t), None
+            server_idx=sidx, last_done_t=last_done_t)
 
     def window_body(carry):
         st, traces, w = carry
-        st, _ = jax.lax.scan(tick, st, w * tpw + jnp.arange(tpw))
+        t_end = (w + 1).astype(jnp.float32) * window
+
+        # the next-event time rides in the carry: computing it once per
+        # processed event (instead of in both cond and body) halves the
+        # reduction work of the hottest loop in the repo
+        def ev_cond(c):
+            _, k, t_next = c
+            return (t_next <= t_end) & (k < static.max_events_per_window)
+
+        def ev_body(c):
+            st, k, t_next = c
+            st = event_step(st, t_next)
+            return st, k + 1, next_event_t(st)
+
+        st, _, _ = jax.lax.while_loop(
+            ev_cond, ev_body,
+            (st, jnp.zeros((), jnp.int32), next_event_t(st)))
 
         # --- window boundary: scheduler + switching ----------------------
-        t_end = ((w + 1) * tpw).astype(jnp.float32) * dt
-        active = (~((t_end >= off_start) & (t_end < off_start + off_for))
-                  ) & valid
+        active = (~((t_end >= off_start) & (t_end < off_end))) & valid
         sr = jnp.where(st["win_total"] > 0,
                        100.0 * st["win_met"] / jnp.maximum(st["win_total"], 1),
                        100.0)
@@ -494,11 +595,15 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
 
         st = dict(st, thresh=thresh, mult=mult, win_met=win_met,
                   win_total=win_total, server_idx=server_idx)
+        acc_run = jnp.where(st["tot"] > 0,
+                            st["correct"] / jnp.maximum(st["tot"], 1), 1.0)
         row = {
             "thresh": jnp.nanmean(jnp.where(active, thresh, jnp.nan)),
             "sr": jnp.sum(jnp.where(valid, sr, 0.0)) / n_real_f,
             "active": jnp.sum(active) / n_real_f,
             "server_idx": server_idx.astype(jnp.float32),
+            "fwd": jnp.sum(jnp.where(valid, st["fwd"], 0)).astype(jnp.float32),
+            "acc": jnp.sum(jnp.where(valid, acc_run, 0.0)) / n_real_f,
         }
         traces = {k: traces[k].at[w].set(row[k]) for k in traces}
         return st, traces, w + 1
@@ -510,7 +615,7 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         return (w < static.n_windows) & ~drained
 
     trace_init = {k: jnp.full((static.n_windows,), jnp.nan, jnp.float32)
-                  for k in ("thresh", "sr", "active", "server_idx")}
+                  for k in TRACE_KEYS}
     final, traces, _ = jax.lax.while_loop(
         window_cond, window_body, (state, trace_init, jnp.zeros((), jnp.int32)))
 
@@ -525,6 +630,7 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         "forwarded_frac": final["fwd"].sum() / jnp.maximum(final["tot"].sum(), 1),
         "completed": final["tot"].sum(),
         "queue_left": final["tail"] - final["head"],
+        "n_events": final["n_events"],
         "traces": traces,
         "final_thresh": final["thresh"],
     }

@@ -1,0 +1,282 @@
+"""Differential test harness: the jitted event-jump core vs the Python
+reference simulator.
+
+Every config runs the *same* sample streams, latency profiles, SLOs and
+scheduler settings through both ``repro.sim.events`` (slow, obvious,
+float64 heap-driven) and ``repro.sim.jaxsim`` (vectorized, jitted,
+float32 event-jump while_loop), then compares totals and per-window
+trajectories. Configs are randomized over 2-8 devices, mixed tiers,
+per-device latencies/SLOs, all three schedulers, and model switching
+on/off; a deterministic sweep guarantees >= 54 configs regardless of
+whether hypothesis is installed, and a hypothesis-driven test widens the
+search when it is.
+
+Documented tolerances (see ``TOL``): the two simulators are *not*
+bit-identical by design —
+
+* window SR attribution: jaxsim credits server completions to the window
+  of the batch *launch* (finish time is known then); the reference sim
+  credits the window of the batch *finish*. A batch straddling a window
+  boundary shifts counts by one window (bounded by one batch latency).
+* float32 vs float64 event times: completions land at rounding-distance
+  different instants; a sample on the threshold knife edge can flip.
+* once a single forwarding decision flips, adaptive schedulers
+  (multitasc++/multitasc) follow slightly different threshold
+  trajectories — so their tolerances are behavioural, while ``static``
+  (fixed thresholds -> identical decision sequences) is held tight.
+
+Conservation (every sample completes exactly once, queue drains) must be
+exact for every config.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic mini engine from conftest
+    from conftest import given, settings, st  # noqa: F401
+
+from repro.configs.cascade_tiers import (DeviceProfile, SERVER_PROFILES,
+                                         ServerProfile)
+from repro.sim import events, jaxsim
+from repro.sim.synthetic import SampleStream, generate
+
+# static structure is (samples, window, n_servers) here: two sample
+# lengths, always two server models = two compiled cores for the harness
+SAMPLE_CHOICES = (48, 80)
+WINDOW = 1.5
+SERVERS = (SERVER_PROFILES["inceptionv3"], SERVER_PROFILES["efficientnetb3"])
+
+# Tolerances, set just above the maxima observed over stressed sweeps
+# (custom slow servers, SLO x1.2-2.2 -> real queueing and SLO misses):
+# totals agreed to sr<=0.94 / acc<=0.005 / fwd_frac<=0.0094 across 54
+# stressed configs; per-window SR differs by the launch-vs-finish
+# attribution shift (mean-abs <= ~7.1). static decisions are identical by
+# construction, so its totals are held (near-)exact.
+TOL = {
+    "static": dict(sr=1.0, acc=0.01, fwd=0.01, sr_traj=10.0,
+                   acc_traj=0.05, fwd_traj=0.02),
+    "multitasc": dict(sr=3.0, acc=0.02, fwd=0.05, sr_traj=12.0,
+                      acc_traj=0.07, fwd_traj=0.12),
+    "multitasc++": dict(sr=3.0, acc=0.02, fwd=0.05, sr_traj=12.0,
+                        acc_traj=0.07, fwd_traj=0.12),
+}
+
+
+@dataclasses.dataclass
+class DiffConfig:
+    seed: int
+    scheduler: str
+    n: int
+    samples: int
+    latencies: np.ndarray        # (n,) per-device
+    slos: np.ndarray             # (n,)
+    tier_ids: np.ndarray         # (n,)
+    c_upper: np.ndarray          # (n_tiers,)
+    servers: tuple               # (ServerProfile, ServerProfile)
+    model_switching: bool
+    init_threshold: float
+    static_threshold: float
+    offline_start: np.ndarray | None = None   # (n,) or None
+    offline_for: np.ndarray | None = None
+
+
+def random_config(seed: int, scheduler: str, *, model_switching=False,
+                  offline=False, stress=False) -> DiffConfig:
+    """stress=True slows the server until queueing delays break SLOs, so
+    the adaptive schedulers actually move their thresholds; stress=False
+    is the paper-profile easy regime (everything meets its SLO)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))
+    samples = int(rng.choice(SAMPLE_CHOICES))
+    # raw uniform latencies: boundary-coincident events have measure zero
+    latencies = rng.uniform(0.04, 0.2, n).astype(np.float32)
+    slo_mult = (1.2, 2.2) if stress else (1.8, 4.0)
+    slos = (latencies * rng.uniform(*slo_mult, n)).astype(np.float32)
+    tier_ids = rng.integers(0, 3, n).astype(np.int32)
+    c_upper = rng.uniform(0.7, 0.9, 3).astype(np.float32)
+    if stress:
+        servers = (
+            ServerProfile("diff-slow", "synthetic", 0.80,
+                          float(rng.uniform(0.1, 0.4)), 8, 0.05),
+            ServerProfile("diff-slower", "synthetic", 0.84,
+                          float(rng.uniform(0.3, 0.6)), 4, 0.05))
+    else:
+        servers = SERVERS
+    off_start = off_for = None
+    if offline:
+        total_t = float(latencies.max()) * samples
+        off_start = np.where(rng.random(n) < 0.5,
+                             rng.uniform(0.2, 0.6, n) * total_t,
+                             np.inf).astype(np.float32)
+        off_for = rng.uniform(2.0, 6.0, n).astype(np.float32)
+    return DiffConfig(
+        seed=seed, scheduler=scheduler, n=n, samples=samples,
+        latencies=latencies, slos=slos, tier_ids=tier_ids, c_upper=c_upper,
+        servers=servers, model_switching=model_switching,
+        init_threshold=0.5,
+        # float32-representable so float64/float32 comparisons agree
+        static_threshold=float(np.float32(rng.uniform(0.3, 0.8))),
+        offline_start=off_start, offline_for=off_for)
+
+
+def _streams_of(cfg: DiffConfig):
+    """One SampleStream per device + the stacked dict for jaxsim —
+    literally the same arrays feed both simulators."""
+    heavy_accs = [s.accuracy for s in cfg.servers]
+    per_dev = [generate(cfg.samples, 0.72, heavy_accs, cfg.seed * 977 + i)
+               for i in range(cfg.n)]
+    stacked = {
+        "confidence": np.stack([s.confidence for s in per_dev]),
+        "correct_light": np.stack([s.correct_light for s in per_dev]),
+        "correct_heavy": np.stack([s.correct_heavy for s in per_dev]),
+    }
+    return per_dev, stacked
+
+
+def run_reference(cfg: DiffConfig, per_dev=None):
+    if per_dev is None:
+        per_dev, _ = _streams_of(cfg)
+    init = (cfg.static_threshold if cfg.scheduler == "static"
+            else cfg.init_threshold)
+    devs = []
+    for i in range(cfg.n):
+        prof = DeviceProfile(f"d{i}", "diff", "low", 0.72,
+                             float(cfg.latencies[i]))
+        dev = events.DeviceRuntime(prof, per_dev[i], float(cfg.slos[i]),
+                                   init)
+        if cfg.offline_start is not None \
+                and np.isfinite(cfg.offline_start[i]):
+            dev.offline_start_t = float(cfg.offline_start[i])
+            dev.offline_for_t = float(cfg.offline_for[i])
+        devs.append(dev)
+    sched = events.make_scheduler(
+        cfg.scheduler, cfg.n, server_profile=cfg.servers[0],
+        slo=float(cfg.slos.min()), init_threshold=cfg.init_threshold,
+        static_threshold=cfg.static_threshold)
+    return events.run(devs, cfg.servers, sched, window=WINDOW,
+                      model_switching=cfg.model_switching,
+                      tier_ids=cfg.tier_ids, c_upper=cfg.c_upper)
+
+
+def run_jax(cfg: DiffConfig, stacked=None):
+    if stacked is None:
+        _, stacked = _streams_of(cfg)
+    spec = jaxsim.JaxSimSpec(
+        scheduler=cfg.scheduler, n_devices=cfg.n,
+        samples_per_device=cfg.samples, window=WINDOW,
+        init_threshold=cfg.init_threshold,
+        static_threshold=cfg.static_threshold,
+        model_switching=cfg.model_switching)
+    return jaxsim.run(spec, stacked, cfg.latencies, cfg.slos, cfg.servers,
+                      tier_ids=cfg.tier_ids, c_upper=cfg.c_upper,
+                      offline_start=cfg.offline_start,
+                      offline_for=cfg.offline_for)
+
+
+def compare(cfg: DiffConfig, *, trajectories=True):
+    """Run both simulators, assert deviations against TOL, and return
+    (ref, out) for any follow-up checks."""
+    per_dev, stacked = _streams_of(cfg)   # generate each stream once
+    ref = run_reference(cfg, per_dev)
+    out = run_jax(cfg, stacked)
+    tol = TOL[cfg.scheduler]
+    total = cfg.n * cfg.samples
+
+    # conservation is exact, always
+    assert int(out["completed"]) == total, cfg
+    assert int(out["queue_left"]) == 0, cfg
+
+    dev = {
+        "sr": abs(float(out["sr"]) - ref.sr),
+        "acc": abs(float(out["accuracy"]) - ref.accuracy),
+        "fwd": abs(float(out["forwarded_frac"]) - ref.forwarded_frac),
+    }
+    if trajectories:
+        fwd_j = np.asarray(out["traces"]["fwd"])
+        keep = ~np.isnan(fwd_j)
+        fwd_j = fwd_j[keep]
+        sr_j = np.asarray(out["traces"]["sr"])[keep]
+        acc_j = np.asarray(out["traces"]["acc"])[keep]
+        fwd_e = np.asarray(ref.timeline["forwarded"], np.float64)
+        sr_e = np.stack(ref.timeline["sr"]).mean(axis=1)
+        acc_e = np.asarray(ref.timeline["accuracy"])
+        w = min(len(fwd_j), len(fwd_e))
+        assert w >= 2, (cfg, len(fwd_j), len(fwd_e))
+        fwd_tot = max(float(out["forwarded_frac"]) * total, 1.0)
+        dev["fwd_traj"] = float(
+            np.max(np.abs(fwd_j[:w] - fwd_e[:w])) / fwd_tot)
+        dev["sr_traj"] = float(np.mean(np.abs(sr_j[:w] - sr_e[:w])))
+        # skip the first window: the running accuracy averages only a
+        # handful of samples there and one flipped sample moves it a lot
+        dev["acc_traj"] = float(np.max(np.abs(acc_j[1:w] - acc_e[1:w]))) \
+            if w > 1 else 0.0
+
+    for k, v in dev.items():
+        assert v <= tol[k], (cfg.scheduler, cfg.seed, k, v, tol[k])
+    return ref, out
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweep: 18 seeds x 3 schedulers = 54 configs, odd seeds
+# congested (stress), even seeds in the easy paper-profile regime
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler", ["multitasc++", "multitasc", "static"])
+@pytest.mark.parametrize("seed", range(18))
+def test_differential_randomized(seed, scheduler):
+    compare(random_config(seed, scheduler, stress=bool(seed % 2)))
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "static"])
+@pytest.mark.parametrize("seed", range(3))
+def test_differential_model_switching(seed, scheduler):
+    cfg = random_config(100 + seed, scheduler, model_switching=True)
+    ref, out = compare(cfg)
+    # static thresholds never move, so the switching decision sequence is
+    # identical in both sims: final server choice must agree exactly
+    if scheduler == "static":
+        tr = np.asarray(out["traces"]["server_idx"])
+        tr = tr[~np.isnan(tr)]
+        w = min(len(tr), len(ref.timeline["server_idx"]))
+        np.testing.assert_array_equal(
+            tr[:w - 1], np.asarray(ref.timeline["server_idx"][:w - 1]))
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "multitasc", "static"])
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_tied_latencies(seed, scheduler):
+    """Latencies snapped to a coarse 1/32 grid -> clusters of devices
+    complete at the *same instant* (exactly the regime every benchmark
+    figure runs, via np.full(N, dev.latency)). Simultaneous arrivals
+    must form one batch in both simulators, not a b=1 batch plus
+    stragglers in one of them."""
+    cfg = random_config(300 + seed, scheduler, stress=bool(seed % 2))
+    cfg.latencies = np.maximum(np.round(cfg.latencies * 32) / 32,
+                               1 / 32).astype(np.float32)
+    cfg.slos = (cfg.latencies * 2.0).astype(np.float32)
+    compare(cfg)
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "static"])
+@pytest.mark.parametrize("seed", range(3))
+def test_differential_offline(seed, scheduler):
+    # offline deferral: totals-level comparison (the reference sim keeps
+    # stale SR rows for offline devices; jaxsim reports 100 -> per-window
+    # SR rows are not comparable)
+    compare(random_config(200 + seed, scheduler, offline=True),
+            trajectories=False)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis widens the search when installed; the conftest mini engine
+# runs a deterministic sample otherwise
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(1000, 100_000),
+       scheduler=st.sampled_from(["multitasc++", "multitasc", "static"]),
+       stress=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_differential_property(seed, scheduler, stress):
+    compare(random_config(seed, scheduler, stress=stress))

@@ -1,0 +1,119 @@
+"""Golden regression fixtures for the paper-figure benchmarks.
+
+``tests/golden/figures.json`` pins the behavioural metrics (satisfaction
+rate, accuracy, throughput, per-tier slices) of every sim figure at
+``--quick`` settings, captured from the pre-event-jump tick-grid core.
+This test re-runs the figures through the current engine and fails on
+drift beyond tolerance — proving the event-jump rewrite (and any future
+engine change) is behaviour-preserving end to end, not just on the unit
+level.
+
+Observed drift at the event-jump switchover: sr <= 4.31 (a knife-edge
+per-tier slice under overload; overall sr <= 1.6), acc <= 0.0024,
+throughput <= 0.5% relative — the tolerances below leave modest headroom
+over that. To re-capture after an *intentional* behaviour change:
+
+    PYTHONPATH=src python -m benchmarks.run --quick > rows.csv
+    # then rebuild tests/golden/figures.json from rows.csv (same format)
+
+and document why in the commit message.
+"""
+import json
+import math
+import pathlib
+
+import numpy as np
+import pytest
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "figures.json"
+
+SR_TOL = 5.0        # absolute, for 0-100 sr-family metrics
+ACC_TOL = 0.01      # absolute, for [0,1] accuracy-family metrics
+THR_REL_TOL = 0.03  # relative, for throughput (samples/s)
+CORR_TOL = 0.5      # absolute, for the fig19 threshold/activity corr
+SWITCH_TOL = 1.0    # absolute, for fig17 model-switch counts
+
+
+def _family(key: str) -> str:
+    if "corr" in key:
+        return "corr"
+    if key.startswith("acc"):
+        return "acc"
+    if key.startswith("switches"):
+        return "switches"
+    if key.startswith("thr"):
+        return "thr"
+    return "sr"      # sr, sr_min, sr_max, sr_<tier>
+
+
+@pytest.fixture(scope="module")
+def current_rows():
+    """All sim figures at --quick settings through the current engine."""
+    from benchmarks import common
+    old = (common.SEEDS, common.SAMPLES, common.DEVICE_COUNTS)
+    settings = json.loads(GOLDEN.read_text())["_settings"]
+    common.SEEDS = tuple(settings["seeds"])
+    common.SAMPLES = settings["samples"]
+    common.DEVICE_COUNTS = tuple(settings["device_counts"])
+    try:
+        from benchmarks import (ablation_components, fig4_homogeneous,
+                                fig7_heavy_server, fig10_convergence,
+                                fig11_heterogeneous, fig15_transformers,
+                                fig17_switching, fig19_intermittent)
+        rows = {}
+        for mod in (fig4_homogeneous, fig7_heavy_server, fig10_convergence,
+                    fig11_heterogeneous, fig15_transformers,
+                    fig17_switching, fig19_intermittent,
+                    ablation_components):
+            for row in mod.run():
+                if "probe" in row.name:   # perf probes, not behaviour
+                    continue
+                metrics = {}
+                for kv in row.derived.split(";"):
+                    k, v = kv.split("=")
+                    metrics[k] = float(v)
+                rows[row.name] = metrics
+        return rows
+    finally:
+        common.SEEDS, common.SAMPLES, common.DEVICE_COUNTS = old
+
+
+def test_no_drift_vs_golden(current_rows):
+    golden = json.loads(GOLDEN.read_text())["rows"]
+    assert set(current_rows) == set(golden), (
+        "figure row set changed; re-capture tests/golden/figures.json")
+    failures = []
+    for name, gm in golden.items():
+        cm = current_rows[name]
+        for key, gv in gm.items():
+            if key not in cm:
+                failures.append(f"{name}: {key} missing")
+                continue
+            cv = cm[key]
+            if math.isnan(gv) or math.isnan(cv):
+                if math.isnan(gv) != math.isnan(cv):
+                    failures.append(f"{name}: {key} nan mismatch "
+                                    f"golden={gv} now={cv}")
+                continue
+            fam = _family(key)
+            if fam == "thr":
+                ok = abs(cv - gv) <= THR_REL_TOL * max(abs(gv), 1e-9)
+            elif fam == "acc":
+                ok = abs(cv - gv) <= ACC_TOL
+            elif fam == "corr":
+                ok = abs(cv - gv) <= CORR_TOL
+            elif fam == "switches":
+                ok = abs(cv - gv) <= SWITCH_TOL
+            else:
+                ok = abs(cv - gv) <= SR_TOL
+            if not ok:
+                failures.append(
+                    f"{name}: {key} golden={gv:.4f} now={cv:.4f}")
+    assert not failures, "golden drift:\n" + "\n".join(failures)
+
+
+def test_golden_covers_all_figures(current_rows):
+    prefixes = {n.split("/")[0] for n in current_rows}
+    assert {"fig4_homog", "fig7_effb3", "fig10_convergence",
+            "fig11_hetero", "fig15_vit", "fig17_switch",
+            "fig19_intermittent", "ablation"} <= prefixes

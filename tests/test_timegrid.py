@@ -1,0 +1,156 @@
+"""Edge cases of the event-jump time model.
+
+All scenarios use power-of-two latencies/windows so event times are
+exactly representable in float32 and boundary coincidences are *exact*,
+not approximate: draining precisely on a window boundary, a window
+longer than the whole simulated duration, heavy device-axis padding, a
+three-way simultaneous event (completion == batch finish == window
+boundary), and the launch-causality guarantee that replaced the old
+tick-snap ``launch_t = max(busy_until, t - dt, ...)`` bias.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.cascade_tiers import DeviceProfile, ServerProfile
+from repro.sim import events, jaxsim
+from repro.sim.synthetic import SampleStream
+
+SRV = ServerProfile("edge-srv", "synthetic", 0.9, 0.125, 8, 0.0)
+
+
+def _streams(conf):
+    """Streams where every sample is correct on both models."""
+    conf = np.asarray(conf, np.float32)
+    ones = np.ones(conf.shape, np.int8)
+    return {"confidence": conf, "correct_light": ones,
+            "correct_heavy": ones[..., None]}
+
+
+def _run(conf, latency, slo, *, window=1.0, threshold, servers=(SRV,),
+         **kw):
+    conf = np.asarray(conf, np.float32)
+    n, s = conf.shape
+    spec = jaxsim.JaxSimSpec(scheduler="static", n_devices=n,
+                             samples_per_device=s, window=window,
+                             static_threshold=threshold)
+    return jaxsim.run(spec, _streams(conf), np.asarray(latency, np.float32),
+                      np.asarray(slo, np.float32), servers, **kw)
+
+
+def test_drain_exactly_on_window_boundary():
+    # one device, latency 1/4, window 1: the 8th completion lands at
+    # t=2.0, exactly the end of window 1 — it must be processed inside
+    # window 1 (before that window's scheduler update), and the run must
+    # early-exit right after it
+    out = _run(np.full((1, 8), 0.9), [0.25], [0.25], threshold=0.0)
+    assert int(out["completed"]) == 8
+    assert int(out["queue_left"]) == 0
+    sr_rows = np.asarray(out["traces"]["sr"])
+    assert np.sum(~np.isnan(sr_rows)) == 2       # windows 0 and 1 only
+    assert float(out["sr"]) == 100.0
+    assert float(out["throughput"]) == pytest.approx(8 / 2.0)
+
+
+def test_window_longer_than_whole_duration():
+    # duration (0.25*8+40 -> quantized 60) <= window: the entire run,
+    # including the drain, fits in window 0 and no further window runs
+    out = _run(np.full((1, 8), 0.9), [0.25], [0.25], window=60.0,
+               threshold=0.0)
+    assert int(out["completed"]) == 8
+    rows = np.asarray(out["traces"]["sr"])
+    assert rows.shape == (1,)                    # n_windows == 1 exactly
+    assert np.sum(~np.isnan(rows)) == 1
+    assert float(out["sr"]) == 100.0
+
+
+def test_padding_is_inert():
+    # 3 real devices pad to N_BUCKET; the padded tail must contribute
+    # nothing to any metric and per-device outputs come back unpadded
+    n, s = 3, 16
+    out = _run(np.full((n, s), 0.9), [0.25] * n, [0.25] * n, threshold=0.0)
+    assert out["per_device_sr"].shape == (n,)
+    assert out["per_device_acc"].shape == (n,)
+    assert int(out["completed"]) == n * s        # not N_BUCKET * s
+    np.testing.assert_array_equal(out["per_device_sr"], 100.0)
+    np.testing.assert_array_equal(out["per_device_acc"], 1.0)
+    act = np.asarray(out["traces"]["active"])
+    assert np.nanmax(act) == 1.0 and np.nanmin(act[~np.isnan(act)]) == 1.0
+
+
+def test_simultaneous_completion_batchfinish_window_boundary():
+    """Completion == batch finish == window boundary at t=1.0.
+
+    Resolution order is documented as: completions first (they enqueue),
+    then the finishing batch frees the server and the next batch launches
+    at the same instant, then the window update. Device 0 forwards
+    everything, device 1 classifies locally; server latency 1/2 with
+    device latency 1/2 makes every event land on the k/2 grid.
+    """
+    conf = np.array([[0.0, 0.0], [0.9, 0.9]])
+    out = _run(conf, [0.5, 0.5], [1.0, 0.5], threshold=0.5,
+               servers=(ServerProfile("sync", "synthetic", 0.9, 0.5, 8,
+                                      0.0),))
+    # dev0 sample0: starts 0.0, forwarded at 0.5, launch 0.5, finish 1.0
+    #   -> latency 1.0 == slo, met; dev0 sample1: starts 0.5, forwarded at
+    #   1.0 (= batch finish = window end), launch 1.0 -> latency 1.0, met
+    # dev1: two local completions, latency 0.5 == slo, met
+    assert int(out["completed"]) == 4
+    assert float(out["sr"]) == 100.0
+    assert float(out["accuracy"]) == 1.0
+    # exactly two event-loop iterations: t=0.5 and t=1.0 each process a
+    # completion cluster AND a launch; the 2nd batch flies over an empty
+    # queue so its finish is not an event
+    assert int(out["n_events"]) == 2
+    fwd = np.asarray(out["traces"]["fwd"])
+    assert fwd[0] == 2.0                         # both forwards in window 0
+    assert float(out["throughput"]) == pytest.approx(4 / 1.5)
+
+    # the reference sim resolves the same instant in the same order
+    devs = []
+    for i in range(2):
+        st = _streams(conf)
+        devs.append(events.DeviceRuntime(
+            DeviceProfile(f"d{i}", "x", "low", 0.9, 0.5),
+            SampleStream(st["confidence"][i], st["correct_light"][i],
+                         st["correct_heavy"][i]),
+            [1.0, 0.5][i], 0.5))
+    sched = events.make_scheduler("static", 2, server_profile=SRV, slo=0.5,
+                                  static_threshold=0.5)
+    ref = events.run(devs, (ServerProfile("sync", "synthetic", 0.9, 0.5, 8,
+                                          0.0),), sched, window=1.0)
+    assert ref.sr == float(out["sr"])
+    assert ref.accuracy == float(out["accuracy"])
+    assert ref.forwarded_frac == float(out["forwarded_frac"])
+
+
+def test_launch_causality_no_batch_before_arrival():
+    """Regression for the old tick-snap bias: a batch must never launch
+    before the arrival of the sample that filled it.
+
+    One device forwards every sample (arrival k/4); the server (latency
+    1/8) is always idle at the next arrival, so every launch happens at
+    exactly the arrival instant and every sample's end-to-end latency is
+    exactly 1/4 + 1/8 = 0.375. An early (pre-arrival) launch would
+    produce a smaller latency and leak through the tight-SLO assertion.
+    """
+    conf = np.zeros((1, 16))
+    lat, n = [0.25], 16
+    # slo exactly the analytic latency: everything met
+    out = _run(conf, lat, [0.375], threshold=0.5)
+    assert int(out["completed"]) == n
+    assert float(out["sr"]) == 100.0
+    assert float(out["forwarded_frac"]) == 1.0
+    # slo a hair below: nothing met — any early launch would show up here
+    out = _run(conf, lat, [0.37], threshold=0.5)
+    assert float(out["sr"]) == 0.0
+
+
+def test_offline_deferral_exact():
+    # device latency 1/4, offline [0.375, 1.375): the completion due at
+    # 0.5 fires at exactly 1.375, the next at 1.625
+    conf = np.full((1, 4), 0.9)
+    out = _run(conf, [0.25], [0.25], threshold=0.0,
+               offline_start=[0.375], offline_for=[1.0])
+    assert int(out["completed"]) == 4
+    # completions at 0.25, 1.375, 1.625, 1.875 -> throughput 4/1.875
+    assert float(out["throughput"]) == pytest.approx(4 / 1.875)

@@ -1,0 +1,68 @@
+"""Benchmark regression gate: compare a fresh ``benchmarks/run.py
+--json`` output against the committed baseline (BENCH_jaxsim.json).
+
+Hard failures (exit 1):
+  * a figure's ``n_compiles`` exceeds the baseline — the static/traced
+    split leaked a traced value into a compile key;
+  * a figure's ``n_points`` changed — sweep coverage silently shrank
+    or grew without the baseline being re-captured.
+
+Wall time is reported but only warned about by default (CI machines are
+too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
+R * baseline into a failure.
+
+Usage: python tools/check_bench.py NEW.json BASELINE.json [--strict-wall R]
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new")
+    ap.add_argument("baseline")
+    ap.add_argument("--strict-wall", type=float, default=None,
+                    metavar="RATIO",
+                    help="fail when wall_s > RATIO * baseline wall_s")
+    args = ap.parse_args()
+
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures, warnings = [], []
+    for fig, b in sorted(base.items()):
+        if fig not in new:
+            warnings.append(f"{fig}: missing from new run (skipped?)")
+            continue
+        n = new[fig]
+        if n["n_compiles"] > b["n_compiles"]:
+            failures.append(
+                f"{fig}: n_compiles {n['n_compiles']} > baseline "
+                f"{b['n_compiles']} (recompile regression)")
+        if n["n_points"] != b["n_points"]:
+            failures.append(
+                f"{fig}: n_points {n['n_points']} != baseline "
+                f"{b['n_points']} (sweep coverage changed)")
+        if b.get("wall_s"):
+            ratio = n["wall_s"] / b["wall_s"]
+            line = (f"{fig}: wall {n['wall_s']:.3f}s vs baseline "
+                    f"{b['wall_s']:.3f}s ({ratio:.2f}x)")
+            if args.strict_wall is not None and ratio > args.strict_wall:
+                failures.append(line)
+            elif ratio > 1.5:
+                warnings.append(line)
+            else:
+                print("ok:", line)
+
+    for w in warnings:
+        print("WARN:", w, file=sys.stderr)
+    for f_ in failures:
+        print("FAIL:", f_, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,8 +46,8 @@ def run():
                                    samples_per_device=SAMPLES,
                                    init_threshold=0.05, **kw)
                  for _, kw in VARIANTS for _ in seeds]
-        out = jaxsim.run_sweep(specs, tiled, np.full(n, dev.latency),
-                               np.full(n, SLO), (srv,))
+        out = common.sweep(specs, tiled, np.full(n, dev.latency),
+                           np.full(n, SLO), (srv,))
         srs = np.asarray(out["sr"]).reshape(len(VARIANTS), len(seeds))
         accs = np.asarray(out["accuracy"]).reshape(len(VARIANTS), len(seeds))
         wall = (time.perf_counter() - t0) / (len(VARIANTS) * len(seeds)) * 1e6

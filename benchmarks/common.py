@@ -4,9 +4,11 @@ Each figure module exposes ``run() -> list[Row]``; benchmarks/run.py
 prints them as ``name,us_per_call,derived`` CSV (us_per_call = wall time
 of the sim/kernel call per sweep point; derived = the figure's metrics).
 
-All sim figures go through ``jaxsim.run_sweep``: the seeds of one sweep
-point run batched in a single vmapped call, and sample streams are cached
-so the schedulers of one figure share them instead of regenerating.
+All sim figures go through ``sweep`` below: the seeds of one sweep point
+run batched in a single vmapped call — sharded over ``MESH`` when
+``benchmarks/run.py --mesh-shape`` configured one — and sample streams
+are cached so the schedulers of one figure share them instead of
+regenerating.
 """
 from __future__ import annotations
 
@@ -25,6 +27,15 @@ from repro.sim import jaxsim, synthetic
 SEEDS = (0, 1, 2)            # paper: three seeds, report mean/min/max
 SAMPLES = 600                # per device (paper: 5000; scaled for CPU)
 DEVICE_COUNTS = (2, 5, 10, 25, 50, 100)
+MESH = None                  # set by run.py --mesh-shape; None = one chip
+
+
+def sweep(specs, streams, dev_latency, slo, servers, **kw):
+    """Every figure's sweep call funnels through here so one flag shards
+    the whole harness: ``run_sweep_sharded`` over ``MESH`` (bitwise equal
+    to ``run_sweep`` when MESH is None or single-lane)."""
+    return jaxsim.run_sweep_sharded(specs, streams, dev_latency, slo,
+                                    servers, mesh=MESH, **kw)
 
 
 @dataclasses.dataclass
@@ -78,8 +89,8 @@ def run_point(scheduler: str, n: int, dev: DeviceProfile,
         scheduler=scheduler, n_devices=n, samples_per_device=samples,
         static_threshold=static_t or 0.35, **sim_kw)
     t0 = time.perf_counter()
-    out = jaxsim.run_sweep(spec, streams, np.full(n, dev.latency),
-                           np.full(n, slo), tuple(servers))
+    out = sweep(spec, streams, np.full(n, dev.latency),
+                np.full(n, slo), tuple(servers))
     srs = np.asarray(out["sr"], np.float64)
     accs = np.asarray(out["accuracy"], np.float64)
     thrs = np.asarray(out["throughput"], np.float64)
@@ -96,3 +107,44 @@ def run_point(scheduler: str, n: int, dev: DeviceProfile,
 def derived_str(d: Dict) -> str:
     return (f"sr={d['sr']:.2f};sr_min={d['sr_min']:.2f};"
             f"sr_max={d['sr_max']:.2f};acc={d['acc']:.4f};thr={d['thr']:.1f}")
+
+
+# behavioural sim figures, in run order — the golden fixture's coverage.
+# fig11_scaleout is deliberately absent: it is a perf probe of the
+# sharded engine, not a behaviour row.
+SIM_FIGURE_MODULES = (
+    "fig4_homogeneous", "fig7_heavy_server", "fig10_convergence",
+    "fig11_heterogeneous", "fig15_transformers", "fig17_switching",
+    "fig19_intermittent", "ablation_components")
+
+
+def capture_figure_rows(settings: Dict) -> Dict[str, Dict[str, float]]:
+    """Run every behavioural sim figure at ``settings`` and return
+    ``{row_name: {metric: value}}`` (perf probe rows dropped).
+
+    The single source of truth for golden-fixture capture: both
+    tests/test_golden_figures.py and tools/capture_golden.py call this,
+    so the figure list and the ``derived`` parsing can never diverge
+    between the gate and the re-capture tool. Module settings are
+    restored on exit.
+    """
+    import importlib
+
+    global SEEDS, SAMPLES, DEVICE_COUNTS
+    old = (SEEDS, SAMPLES, DEVICE_COUNTS)
+    SEEDS = tuple(settings["seeds"])
+    SAMPLES = settings["samples"]
+    DEVICE_COUNTS = tuple(settings["device_counts"])
+    try:
+        rows = {}
+        for name in SIM_FIGURE_MODULES:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row in mod.run():
+                if "probe" in row.name:
+                    continue
+                rows[row.name] = {
+                    k: float(v) for k, v in
+                    (kv.split("=") for kv in row.derived.split(";"))}
+        return rows
+    finally:
+        SEEDS, SAMPLES, DEVICE_COUNTS = old

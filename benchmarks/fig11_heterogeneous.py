@@ -27,8 +27,8 @@ def _run_sweep(scheduler, n, srv_name):
     spec = jaxsim.JaxSimSpec(scheduler=scheduler, n_devices=n,
                              samples_per_device=common.SAMPLES,
                              static_threshold=float(static_t))
-    out = jaxsim.run_sweep(spec, streams, lat, np.full(n, SLO), (srv,),
-                           tier_ids=tier_ids)
+    out = common.sweep(spec, streams, lat, np.full(n, SLO), (srv,),
+                       tier_ids=tier_ids)
     per_sr = np.asarray(out["per_device_sr"])      # (seeds, n)
     per_acc = np.asarray(out["per_device_acc"])
     return np.asarray(out["sr"]), per_sr, per_acc, tier_ids

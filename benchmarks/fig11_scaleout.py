@@ -1,0 +1,61 @@
+"""Scale-out probe: one ~200-point (scheduler-config x seed) grid through
+``run_sweep_sharded`` in a single call.
+
+This is the production-sweep shape the sharded engine exists for: every
+point shares static structure, so the whole grid is ONE executable —
+compiled once, its B axis sharded over ``common.MESH`` when
+``benchmarks/run.py --mesh-shape`` configured one. Wall time scales down
+with the shard count because the per-shard event loops are independent
+(compare the ``wall_s`` of this figure across ``--mesh-shape 1`` /
+``--mesh-shape 4`` runs at fixed ``XLA_FLAGS=--xla_force_host_platform_
+device_count``); ``n_compiles`` stays <= 1 regardless of shard count.
+
+Note on emulated hosts: ``--xla_force_host_platform_device_count``
+devices share one machine's cores, so the speedup there is bounded by
+whatever intra-op parallelism the unsharded run already extracted
+(~1.4x observed at 4 emulated shards) — the CI run proves placement and
+per-shard independence; linear scale-out needs real hosts.
+"""
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import DEVICE_PROFILES, SERVER_PROFILES, Row
+from repro.sim import jaxsim
+
+SLO = 0.15
+N = 25
+SEEDS = tuple(range(8))
+SR_TARGETS = (90.0, 92.5, 95.0, 97.5, 99.0)
+GAINS = (0.0025, 0.005, 0.01, 0.02, 0.04)
+
+
+def run():
+    dev = DEVICE_PROFILES["low"]
+    srv = SERVER_PROFILES["inceptionv3"]
+    streams = common.cached_streams(SEEDS, N, common.SAMPLES, dev.accuracy,
+                                    (srv.accuracy,))
+    # config grid on the outer axis, seeds inner: B = 5 * 5 * 8 = 200
+    configs = [(t, a) for t in SR_TARGETS for a in GAINS]
+    tiled = {k: np.concatenate([v] * len(configs)) for k, v in streams.items()}
+    specs = [jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=N,
+                               samples_per_device=common.SAMPLES,
+                               sr_target=t, a=a)
+             for t, a in configs for _ in SEEDS]
+    t0 = time.perf_counter()
+    out = common.sweep(specs, tiled, np.full(N, dev.latency),
+                       np.full(N, SLO), (srv,))
+    wall = time.perf_counter() - t0
+    srs = np.asarray(out["sr"]).reshape(len(configs), len(SEEDS)).mean(axis=1)
+    accs = np.asarray(out["accuracy"]).reshape(len(configs),
+                                               len(SEEDS)).mean(axis=1)
+    # headline: best accuracy among configs that hold their SR target
+    held = [i for i, (t, _) in enumerate(configs) if srs[i] >= t]
+    best = max(held, key=lambda i: accs[i]) if held else int(np.argmax(srs))
+    t_best, a_best = configs[best]
+    return [Row(
+        f"fig11_scaleout/grid{len(specs)}", wall / len(specs) * 1e6,
+        f"sr={srs.mean():.2f};acc={accs.mean():.4f};"
+        f"best=target{t_best:g}_a{a_best:g};sr_best={srs[best]:.2f};"
+        f"acc_best={accs[best]:.4f}")]

@@ -31,10 +31,10 @@ def run():
                     samples_per_device=common.SAMPLES,
                     model_switching=switching,
                     server_init=init_idx if switching else 0)
-                out = jaxsim.run_sweep(spec, streams,
-                                       np.full(n, dev.latency),
-                                       np.full(n, SLO), srv_set,
-                                       c_upper=np.array([0.8], np.float32))
+                out = common.sweep(spec, streams,
+                                   np.full(n, dev.latency),
+                                   np.full(n, SLO), srv_set,
+                                   c_upper=np.array([0.8], np.float32))
                 srs = np.asarray(out["sr"])
                 accs = np.asarray(out["accuracy"])
                 tr = np.asarray(out["traces"]["server_idx"])  # (seeds, W)

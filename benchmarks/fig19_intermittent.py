@@ -48,9 +48,9 @@ def run():
                                  samples_per_device=common.SAMPLES,
                                  static_threshold=static_t,
                                  init_threshold=init)
-        out = jaxsim.run_sweep(spec, streams, np.full(N, dev.latency),
-                               np.full(N, SLO), (srv,),
-                               offline_start=off_start, offline_for=off_for)
+        out = common.sweep(spec, streams, np.full(N, dev.latency),
+                           np.full(N, SLO), (srv,),
+                           offline_start=off_start, offline_for=off_for)
         srs = np.asarray(out["sr"])
         accs = np.asarray(out["accuracy"])
         tr_t_all = np.asarray(out["traces"]["thresh"])  # (seeds, W)
@@ -108,12 +108,12 @@ def _duration_independence(dev, srv, static_t):
                   offline_for=np.full((len(seeds), N), 6.0 * scale))
         args = (spec, streams, np.full(N, dev.latency * scale),
                 np.full(N, SLO * scale), (srv_s,))
-        jaxsim.run_sweep(*args, **kw)              # warm the core
+        common.sweep(*args, **kw)                  # warm the core
         ev0 = jaxsim.stats_snapshot()["events"]
         wall = float("inf")
         for _ in range(3):                         # min-of-3: noise floor
             t0 = time.perf_counter()
-            out = jaxsim.run_sweep(*args, **kw)
+            out = common.sweep(*args, **kw)
             wall = min(wall, time.perf_counter() - t0)
         ev = (jaxsim.stats_snapshot()["events"] - ev0) // 3
         return wall, ev, out

@@ -3,11 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV. ``--only fig4`` runs a subset;
 ``--quick`` shrinks seeds/samples for smoke runs.
 
+``--mesh-shape 4`` (or ``2,2``) shards every figure's sweep axis over a
+host mesh via ``run_sweep_sharded`` — emulate hosts on one machine with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (must be set
+before jax initializes; CI runs exactly this).
+
 ``--json PATH`` (default ``BENCH_jaxsim.json`` under ``--quick``) records
-``{figure: {wall_s, n_points, n_compiles, n_events}}`` per executed
-figure so the perf trajectory of the sweep engine stays measurable
-across PRs (``n_events`` = event-jump loop iterations: the quantity wall
-time is now proportional to, instead of simulated seconds).
+``{figure: {wall_s, n_points, n_compiles, n_events, n_shards}}`` per
+executed figure so the perf trajectory of the sweep engine stays
+measurable across PRs (``n_events`` = event-jump loop iterations: the
+quantity wall time is proportional to; ``n_shards`` = mesh lanes the
+sweep axis was sharded over).
 
 ``tools/check_bench.py`` compares a fresh ``--json`` against the
 committed baseline (CI runs it on every push).
@@ -22,31 +28,42 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mesh-shape", default=None, metavar="N[,M]",
+                    help="shard the sweep axis over a mesh of this shape"
+                         " (e.g. 4); needs >= that many jax devices")
     ap.add_argument("--json", nargs="?", const="BENCH_jaxsim.json",
                     default=None, metavar="PATH",
                     help="write per-figure {wall_s, n_points, n_compiles}"
                          " (default on for --quick)")
     args = ap.parse_args()
 
+    from benchmarks import common
     if args.quick:
-        from benchmarks import common
         common.SEEDS = (0,)
         common.SAMPLES = 200
         common.DEVICE_COUNTS = (2, 25, 100)
         if args.json is None:
             args.json = "BENCH_jaxsim.json"
+    n_shards = 1
+    if args.mesh_shape:
+        from repro.launch.mesh import make_sweep_mesh, n_lanes
+        shape = tuple(int(s) for s in args.mesh_shape.split(","))
+        common.MESH = make_sweep_mesh(shape)
+        n_shards = n_lanes(common.MESH)
+        print(f"# sweep mesh {shape}: {n_shards} shards", file=sys.stderr)
 
     from benchmarks import (ablation_components, fig4_homogeneous,
                             fig7_heavy_server, fig10_convergence,
-                            fig11_heterogeneous, fig15_transformers,
-                            fig17_switching, fig19_intermittent,
-                            kernels_bench)
+                            fig11_heterogeneous, fig11_scaleout,
+                            fig15_transformers, fig17_switching,
+                            fig19_intermittent, kernels_bench)
     from repro.sim import jaxsim
     modules = {
         "fig4": fig4_homogeneous,
         "fig7": fig7_heavy_server,
         "fig10": fig10_convergence,
         "fig11": fig11_heterogeneous,
+        "fig11_scaleout": fig11_scaleout,
         "fig15": fig15_transformers,
         "fig17": fig17_switching,
         "fig19": fig19_intermittent,
@@ -56,7 +73,10 @@ def main() -> None:
     bench = {}
     print("name,us_per_call,derived")
     for key, mod in modules.items():
-        if args.only and args.only not in key:
+        # an exact figure name selects just that figure ("--only fig11"
+        # must not drag in fig11_scaleout); otherwise substring-match
+        if args.only and (key != args.only if args.only in modules
+                          else args.only not in key):
             continue
         before = jaxsim.stats_snapshot()
         t0 = time.perf_counter()
@@ -68,6 +88,11 @@ def main() -> None:
             "n_points": after["points"] - before["points"],
             "n_compiles": after["backend_compiles"] - before["backend_compiles"],
             "n_events": after["events"] - before["events"],
+            "n_shards": n_shards,
+            # points that actually executed on a >1-lane sharded core
+            # (B=1 sweeps fall back to the local path even with a mesh)
+            "n_points_sharded": after["sharded_points"]
+                                - before["sharded_points"],
         }
         for row in rows:
             print(row.csv())

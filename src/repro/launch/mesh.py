@@ -1,17 +1,51 @@
-"""Production mesh definition (TPU v5e).
+"""Production mesh definition (TPU v5e) + sweep-mesh helpers.
 
-A FUNCTION, not a module-level constant, so importing this module never
+FUNCTIONS, not module-level constants, so importing this module never
 touches jax device state (the dry-run must set
 XLA_FLAGS=--xla_force_host_platform_device_count before first jax init).
 """
 from __future__ import annotations
 
+import functools
+import inspect
+
 import jax
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        """Compat: older jax calls the replication check ``check_rep``."""
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_sweep_mesh(shape=None):
+    """Mesh for sharding a sweep's batch axis over hosts/chips.
+
+    ``shape``: lane counts per mesh axis (e.g. ``(4,)`` or ``(2, 2)``);
+    ``None`` uses every visible device as one flat batch axis. Axis
+    names are batch axes (no ``model`` axis), so ``batch_axes_of``
+    returns all of them.
+    """
+    if shape is None:
+        shape = (jax.device_count(),)
+    shape = tuple(int(s) for s in shape)
+    axes = ("data",) if len(shape) == 1 else \
+        tuple(f"batch{i}" for i in range(len(shape)))
     return jax.make_mesh(shape, axes)
 
 
@@ -22,6 +56,16 @@ def mesh_axes(mesh) -> tuple:
 def batch_axes_of(mesh) -> tuple:
     """Mesh axes the batch dim is sharded over."""
     return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_lanes(mesh) -> int:
+    """Number of shards the batch axis spreads over (1 for mesh=None)."""
+    if mesh is None:
+        return 1
+    out = 1
+    for a in batch_axes_of(mesh):
+        out *= mesh.shape[a]
+    return out
 
 
 def n_chips(mesh) -> int:

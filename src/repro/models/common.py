@@ -6,28 +6,15 @@ exposes ``init(rng, cfg, ...) -> params`` and an apply function.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import inspect
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    _shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-if "check_vma" in inspect.signature(_shard_map).parameters:
-    shard_map = _shard_map
-else:
-    @functools.wraps(_shard_map)
-    def shard_map(*args, **kwargs):
-        """Compat: older jax calls the replication check ``check_rep``."""
-        if "check_vma" in kwargs:
-            kwargs["check_rep"] = kwargs.pop("check_vma")
-        return _shard_map(*args, **kwargs)
+# the version-compat shim lives with the mesh helpers; re-exported here
+# for the model stack (moe.py, distributed launch)
+from repro.launch.mesh import shard_map  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

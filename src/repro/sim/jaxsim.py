@@ -81,6 +81,35 @@ To keep the static key coarse, the engine additionally:
   as soon as every real device finished its stream and the server queue
   drained — padding and the post-completion drain tail cost nothing.
 
+Sharding / placement design (``run_sweep_sharded``)
+---------------------------------------------------
+``run_sweep`` vmaps the B sweep points on one device. At production
+scale (1000s of points) the sweep axis itself becomes the parallel
+resource, so ``run_sweep_sharded(..., mesh=...)`` shards the leading B
+axis over a ``jax.sharding`` mesh:
+
+* the batch axes come from ``launch.mesh.batch_axes_of(mesh)`` (every
+  mesh axis except ``model``), and B is padded up to a multiple of the
+  lane count by repeating point 0 — padded lanes are computed and then
+  dropped, never reported;
+* inputs are placed with ``NamedSharding(mesh, P(batch_axes))`` via
+  ``jax.device_put`` *before* the call (a pure transfer: no throwaway
+  jit ops hit the compile counters) and the per-point arrays enter a
+  ``shard_map`` whose body is the same vmapped event core ``run_sweep``
+  uses — each shard runs its own independent ``while_loop`` over its
+  B/n_shards lanes, so there is no cross-shard synchronization per
+  event, only at exit;
+* server profile tables are replicated (``P()``); stream buffers stay
+  donated exactly as in the unsharded path;
+* a mesh whose lane count is 1 (or ``mesh=None``), and a B=1 sweep —
+  which padding could only duplicate onto every lane — fall back to the
+  local path, bitwise identical by construction.
+
+One compiled executable serves every (scheduler, fleet, threshold)
+point that shares static structure, per (mesh, padded-B) shape; wall
+time scales down with the shard count because the shards' event loops
+never talk to each other.
+
 ``run_sweep`` contract
 ----------------------
 ``run_sweep(specs, streams, dev_latency, slo, servers, ...)`` runs B
@@ -136,6 +165,7 @@ from repro.configs.cascade_tiers import BATCH_LADDER, ServerProfile
 from repro.core import multitasc as mt
 from repro.core import multitascpp as mtpp
 from repro.core import switching
+from repro.launch.mesh import batch_axes_of, n_lanes, shard_map
 
 MAX_POP = 64
 N_BUCKET = 128          # device axis pads up to a multiple of this
@@ -194,6 +224,7 @@ class SweepStats:
     backend_compiles: int = 0   # XLA backend_compile events (all of jax)
     points: int = 0             # sweep points simulated
     events: int = 0             # event-loop iterations across all points
+    sharded_points: int = 0     # points executed by a >1-lane sharded core
 
 
 stats = SweepStats()
@@ -260,16 +291,15 @@ def run(spec: JaxSimSpec, streams, dev_latency, slo, servers:
     return jax.tree.map(lambda x: x[0], out)
 
 
-def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
-              dev_latency, slo, servers: Sequence[ServerProfile], *,
-              tier_ids=None, c_upper=None, offline_start=None,
-              offline_for=None):
-    """Batched sweep: B points through one vmapped, jit-compiled core.
+def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
+             offline_start, offline_for):
+    """Validate and stack a sweep's host-side inputs.
 
-    See the module docstring for the full contract. All points must share
-    static structure; traced values (scheduler kind, thresholds, gains,
-    targets, latency profiles, server profile) vary freely without
-    recompiling.
+    Returns ``(static, params, srv, arrays, b, n)`` where ``params`` is a
+    dict of (B,)-stacked per-point scalars, ``srv`` the replicated server
+    profile tables, and ``arrays`` the (B, ...) per-point tensors in core
+    argument order — all numpy: nothing here touches a device, so the
+    dispatch paths (local / sharded) control placement explicitly.
     """
     if isinstance(specs, JaxSimSpec):
         specs = [specs]
@@ -351,50 +381,134 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
     plist = [_params_of(sp, servers, float(slo_b[i, :n].min()))
              for i, sp in enumerate(specs)]
     params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
+    # numpy on purpose: jnp.asarray on host lists/views dispatches tiny
+    # jit(convert_element_type) programs that pollute the compile
+    # counters (the old fig4/fig17 "recompile leak"); jax.device_put at
+    # the call sites is a pure transfer
     srv = {
-        "base_lat": jnp.asarray([p.base_latency for p in servers],
-                                jnp.float32),
-        "scaling": jnp.asarray([p.batch_scaling for p in servers],
-                               jnp.float32),
-        "max_batch": jnp.asarray([p.max_batch for p in servers], jnp.int32),
+        "base_lat": np.asarray([p.base_latency for p in servers],
+                               np.float32),
+        "scaling": np.asarray([p.batch_scaling for p in servers],
+                              np.float32),
+        "max_batch": np.asarray([p.max_batch for p in servers], np.int32),
     }
 
-    stats.points += b
     arrays = (pad_streams(conf), pad_streams(cl), pad_streams(ch),
               dev_lat, slo_b, tier_b, c_upper_b, off_start_b, off_for_b)
-    with warnings.catch_warnings():
-        # stream buffers are donated; on backends that can't alias them
-        # jax warns — harmless, the copy is what would have happened anyway
-        warnings.filterwarnings(
-            "ignore", message="Some donated buffers were not usable")
-        if b == 1:
-            # B=1 skips vmap: the batched while_loop pays a per-iteration
-            # select over the whole carry even for a single lane, roughly
-            # doubling the cost of the event loop (results are bitwise
-            # identical either way — see test_sweep_matches_serial_bitwise).
-            # Indexing/expanding happens in numpy so no throwaway jit ops
-            # pollute the compile counters.
-            core = _make_core_single(static)
-            out = core({k: jnp.asarray(v[0]) for k, v in params.items()},
-                       srv, *(jnp.asarray(a[0]) for a in arrays))
-            out = jax.tree.map(lambda x: np.asarray(x)[None], out)
-        else:
-            core = _make_core(static)
-            out = core({k: jnp.asarray(v) for k, v in params.items()},
-                       srv, *(jnp.asarray(a) for a in arrays))
+    return static, params, srv, arrays, b, n
+
+
+def _finalize(out, b, n):
+    out = dict(out)
     for k in ("per_device_sr", "per_device_acc", "final_thresh"):
         out[k] = np.asarray(out[k])[:, :n]
     out["n_events"] = np.asarray(out["n_events"])
+    stats.points += b
     stats.events += int(out["n_events"].sum())
     return out
+
+
+def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
+              dev_latency, slo, servers: Sequence[ServerProfile], *,
+              tier_ids=None, c_upper=None, offline_start=None,
+              offline_for=None):
+    """Batched sweep: B points through one vmapped, jit-compiled core.
+
+    See the module docstring for the full contract. All points must share
+    static structure; traced values (scheduler kind, thresholds, gains,
+    targets, latency profiles, server profile) vary freely without
+    recompiling.
+    """
+    static, params, srv, arrays, b, n = _prepare(
+        specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
+        offline_start, offline_for)
+    return _run_local(static, params, srv, arrays, b, n)
+
+
+def _run_local(static, params, srv, arrays, b, n):
+    if b == 1:
+        # B=1 skips vmap: the batched while_loop pays a per-iteration
+        # select over the whole carry even for a single lane, roughly
+        # doubling the cost of the event loop (results are bitwise
+        # identical either way — see test_sweep_matches_serial_bitwise).
+        core = _make_core_single(static)
+        args = (jax.device_put({k: v[0] for k, v in params.items()}),
+                jax.device_put(srv),
+                *(jax.device_put(a[0]) for a in arrays))
+    else:
+        core = _make_core(static)
+        args = (jax.device_put(params), jax.device_put(srv),
+                *(jax.device_put(a) for a in arrays))
+    with warnings.catch_warnings():
+        # scoped to this jit call only: the *local* path may legitimately
+        # fail to alias donated stream buffers on some backends (the copy
+        # is what would have happened anyway); the sharded path must not
+        # swallow donation regressions, so it runs unfiltered
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        out = core(*args)
+    if b == 1:
+        out = jax.tree.map(lambda x: np.asarray(x)[None], out)
+    return _finalize(out, b, n)
+
+
+def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
+                      streams, dev_latency, slo,
+                      servers: Sequence[ServerProfile], *, mesh=None,
+                      tier_ids=None, c_upper=None, offline_start=None,
+                      offline_for=None):
+    """``run_sweep`` with the B axis sharded over a ``jax.sharding`` mesh.
+
+    Same contract and return value as ``run_sweep``; see the module
+    docstring ("Sharding / placement design") for how points are placed.
+    ``mesh=None``, a single-lane mesh, or a single-point sweep falls
+    back to the local path (bitwise identical): padding B=1 to the lane
+    count would make every lane compute the same duplicated point, so a
+    single point can never finish sooner sharded than on the B=1
+    single-core fast path. B >= 2 is padded up to a multiple of the
+    lane count; padded lanes repeat point 0 and are dropped from the
+    result.
+    """
+    lanes = n_lanes(mesh)
+    if lanes <= 1:
+        return run_sweep(specs, streams, dev_latency, slo, servers,
+                         tier_ids=tier_ids, c_upper=c_upper,
+                         offline_start=offline_start,
+                         offline_for=offline_for)
+    static, params, srv, arrays, b, n = _prepare(
+        specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
+        offline_start, offline_for)
+    if b == 1:
+        return _run_local(static, params, srv, arrays, b, n)
+    b_pad = -(-b // lanes) * lanes
+    if b_pad != b:
+        def pad(x):
+            return np.concatenate(
+                [x, np.repeat(x[:1], b_pad - b, axis=0)], axis=0)
+        params = {k: pad(v) for k, v in params.items()}
+        arrays = tuple(pad(a) for a in arrays)
+    bspec = jax.sharding.PartitionSpec(tuple(batch_axes_of(mesh)))
+    batch_sh = jax.sharding.NamedSharding(mesh, bspec)
+    rep_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    core = _make_core_sharded(static, mesh)
+    out = core(jax.device_put(params, batch_sh),
+               jax.device_put(srv, rep_sh),
+               *(jax.device_put(a, batch_sh) for a in arrays))
+    out = jax.tree.map(lambda x: np.asarray(x)[:b], out)
+    stats.sharded_points += b
+    return _finalize(out, b, n)
+
+
+@functools.lru_cache(maxsize=256)
+def _vmapped_core(static: JaxSimStatic):
+    single = functools.partial(_run_core, static)
+    return jax.vmap(single, in_axes=(0, None) + (0,) * 9)
 
 
 @functools.lru_cache(maxsize=256)
 def _make_core(static: JaxSimStatic):
     stats.cores_built += 1
-    single = functools.partial(_run_core, static)
-    batched = jax.vmap(single, in_axes=(0, None) + (0,) * 9)
-    return jax.jit(batched, donate_argnums=(2, 3, 4))
+    return jax.jit(_vmapped_core(static), donate_argnums=(2, 3, 4))
 
 
 @functools.lru_cache(maxsize=256)
@@ -402,6 +516,22 @@ def _make_core_single(static: JaxSimStatic):
     stats.cores_built += 1
     return jax.jit(functools.partial(_run_core, static),
                    donate_argnums=(2, 3, 4))
+
+
+@functools.lru_cache(maxsize=256)
+def _make_core_sharded(static: JaxSimStatic, mesh):
+    """One executable per (static structure, mesh): the vmapped core runs
+    inside ``shard_map``, so each shard's event loop is independent —
+    no cross-shard collective per event, only the final gather."""
+    stats.cores_built += 1
+    bspec = jax.sharding.PartitionSpec(tuple(batch_axes_of(mesh)))
+    rep = jax.sharding.PartitionSpec()
+    # check_vma=False: the body is collective-free (each shard loops over
+    # its own lanes), and the replication checker has no rule for while
+    sharded = shard_map(_vmapped_core(static), mesh=mesh,
+                        in_specs=(bspec, rep) + (bspec,) * 9,
+                        out_specs=bspec, check_vma=False)
+    return jax.jit(sharded, donate_argnums=(2, 3, 4))
 
 
 def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,

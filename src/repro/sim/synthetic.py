@@ -17,6 +17,27 @@ cascades work (forwarded low-confidence samples are exactly the ones the
 heavy model fixes). gamma/noise control confidence sharpness, chosen so
 the BvSB distribution gives the paper-like operating point (~30 % of
 samples below threshold ~0.35-0.5 for the low tier).
+
+Vectorized sweep generation (fixture v2)
+----------------------------------------
+``device_streams`` / ``batched_device_streams`` generate a whole
+``(n_seeds, n_devices, samples)`` block in one vectorized pass instead of
+per-seed/per-device Python loops: one ``(N, M)`` draw per array per sweep
+seed, and a *batched* bisection alpha-fit over the ``(S, N)`` (and
+``(S, N)`` per server profile) accuracy grid — at sweep scale (1000s of
+points x 5000 samples/device) host-side stream generation otherwise
+becomes the bottleneck before the simulator does.
+
+Seed derivation changed with the vectorization
+(``STREAM_FIXTURE_VERSION = 2``): v1 derived per-device generators from
+``seed * 1000 + i``, which collides across sweep seeds once
+``n_devices >= 1000`` (seed 0's device 1000 replayed seed 1's device 0 —
+exactly the fleet size the sharded sweep engine opens up). v2 keys one
+generator per sweep seed from a spawned ``np.random.SeedSequence(seed)``
+child and takes per-device streams as rows of its block draws, so
+streams of distinct sweep seeds are independent at any fleet size.
+Golden fixtures capturing concrete metric values (tests/golden) must be
+regenerated when this version bumps.
 """
 from __future__ import annotations
 
@@ -27,6 +48,7 @@ import numpy as np
 BETA = 2.2
 GAMMA = 2.5
 CONF_NOISE = 0.6
+STREAM_FIXTURE_VERSION = 2   # bump when stream derivation changes
 
 
 def _sigmoid(x):
@@ -84,6 +106,119 @@ def calibration_set(light_acc: float, heavy_acc: float, n: int = 10_000,
     return generate(n, light_acc, heavy_acc, seed)
 
 
+def _seed_rng(seed: int) -> np.random.Generator:
+    """One generator per sweep seed, keyed by a spawned SeedSequence
+    child — no arithmetic on raw seeds, so distinct sweep seeds can
+    never replay each other's device streams (the v1 ``seed*1000 + i``
+    derivation collided once n_devices >= 1000)."""
+    return np.random.default_rng(np.random.SeedSequence(int(seed)).spawn(1)[0])
+
+
+def _sigmoid_into(x: np.ndarray) -> np.ndarray:
+    """In-place sigmoid: same op sequence as ``_sigmoid``, no temps."""
+    np.negative(x, out=x)            # sigmoid(x) = 1 / (1 + exp(-x))
+    np.exp(x, out=x)
+    x += 1.0
+    np.reciprocal(x, out=x)
+    return x
+
+
+def _fit_alpha_batched(target_acc, bz: np.ndarray, *,
+                       buf: np.ndarray | None = None) -> np.ndarray:
+    """``_fit_alpha`` vectorized over leading axes.
+
+    target_acc: broadcastable to ``bz.shape[:-1]`` (e.g. an (S, N) grid);
+    bz: (..., M) pre-scaled difficulty draws (``beta * z``, hoisted by
+    the caller so multi-profile fits share it); buf: optional (..., M)
+    work buffer reused across the 60 bisection rounds (the full-block
+    temps dominate the cost otherwise). Returns alpha of shape
+    ``bz.shape[:-1]``, elementwise identical to the scalar bisection.
+    """
+    target = np.broadcast_to(np.asarray(target_acc, np.float64),
+                             bz.shape[:-1])
+    lo = np.full(target.shape, -10.0)
+    hi = np.full(target.shape, 10.0)
+    if buf is None:
+        buf = np.empty_like(bz)
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        np.subtract(mid[..., None], bz, out=buf)
+        below = _sigmoid_into(buf).mean(axis=-1) < target
+        lo = np.where(below, mid, lo)
+        hi = np.where(below, hi, mid)
+    return 0.5 * (lo + hi)
+
+
+def _stream_blocks(seeds, n_devices: int, samples_per_device: int,
+                   light_accs, heavy_acc):
+    """The vectorized generation pass shared by ``device_streams`` and
+    ``batched_device_streams``: per sweep seed one (N, M) block draw per
+    array (z, u, eps — in that order, matching ``generate``), then a
+    single batched alpha bisection over the (S, N) accuracy grid plus
+    one per server profile. ``_reference_stream_blocks`` is the loop
+    spec this must match bitwise."""
+    n, m = n_devices, samples_per_device
+    s = len(seeds)
+    light = np.broadcast_to(np.asarray(light_accs, np.float64), (n,))
+    heavy = np.atleast_1d(np.asarray(heavy_acc, np.float64))        # (P,)
+    z = np.empty((s, n, m))
+    u = np.empty((s, n, m))
+    eps = np.empty((s, n, m))
+    for i, seed in enumerate(seeds):
+        rng = _seed_rng(seed)
+        z[i] = rng.standard_normal((n, m))
+        u[i] = rng.random((n, m))
+        eps[i] = rng.standard_normal((n, m))
+    bz = BETA * z                    # hoisted: shared by every alpha fit
+    buf = np.empty_like(bz)          # one work buffer for fits + sigmoids
+    a_l = _fit_alpha_batched(light[None, :], bz, buf=buf)           # (S, N)
+    logits_l = a_l[..., None] - bz
+    correct_l = (u < _sigmoid(logits_l)).astype(np.int8)
+    cols = []
+    for acc in heavy:
+        a_h = _fit_alpha_batched(acc, bz, buf=buf)                  # (S, N)
+        np.subtract(a_h[..., None], bz, out=buf)
+        cols.append((u < _sigmoid_into(buf)).astype(np.int8))
+    correct_h = np.stack(cols, axis=-1)                       # (S, N, M, P)
+    conf = _sigmoid(GAMMA * logits_l + CONF_NOISE * eps)
+    return {
+        "confidence": conf.astype(np.float32),
+        "correct_light": correct_l,
+        "correct_heavy": correct_h,
+    }
+
+
+def _reference_stream_blocks(seeds, n_devices: int, samples_per_device: int,
+                             light_accs, heavy_acc):
+    """Per-seed/per-device loop spec of ``_stream_blocks`` (tests only):
+    same generators, same draw order, scalar ``_fit_alpha`` per device —
+    the vectorized pass must reproduce it bitwise."""
+    n, m = n_devices, samples_per_device
+    light = np.broadcast_to(np.asarray(light_accs, np.float64), (n,))
+    heavy = np.atleast_1d(np.asarray(heavy_acc, np.float64))
+    out = []
+    for seed in seeds:
+        rng = _seed_rng(seed)
+        z = np.stack([rng.standard_normal(m) for _ in range(n)])
+        u = np.stack([rng.random(m) for _ in range(n)])
+        eps = np.stack([rng.standard_normal(m) for _ in range(n)])
+        conf = np.empty((n, m), np.float32)
+        correct_l = np.empty((n, m), np.int8)
+        correct_h = np.empty((n, m, len(heavy)), np.int8)
+        for i in range(n):
+            a_l = _fit_alpha(float(light[i]), z[i], BETA)
+            correct_l[i] = (u[i] < _sigmoid(a_l - BETA * z[i]))
+            for p, acc in enumerate(heavy):
+                a_h = _fit_alpha(float(acc), z[i], BETA)
+                correct_h[i, :, p] = (u[i] < _sigmoid(a_h - BETA * z[i]))
+            conf[i] = _sigmoid(GAMMA * (a_l - BETA * z[i])
+                               + CONF_NOISE * eps[i])
+        out.append({"confidence": conf, "correct_light": correct_l,
+                    "correct_heavy": correct_h})
+    return {k: np.stack([o[k] for o in out])
+            for k in ("confidence", "correct_light", "correct_heavy")}
+
+
 def device_streams(n_devices: int, samples_per_device: int, light_accs,
                    heavy_acc, seed: int):
     """Stacked streams for the vectorized simulator.
@@ -91,30 +226,19 @@ def device_streams(n_devices: int, samples_per_device: int, light_accs,
     light_accs: scalar or (n_devices,) per-device light-model accuracy.
     Returns dict of (n_devices, samples_per_device[, n_profiles]) arrays.
     """
-    light_accs = np.broadcast_to(np.asarray(light_accs, np.float64),
-                                 (n_devices,))
-    streams = [
-        generate(samples_per_device, float(light_accs[i]), heavy_acc,
-                 seed * 1000 + i)
-        for i in range(n_devices)
-    ]
-    return {
-        "confidence": np.stack([s.confidence for s in streams]),
-        "correct_light": np.stack([s.correct_light for s in streams]),
-        "correct_heavy": np.stack([s.correct_heavy for s in streams]),
-    }
+    blocks = _stream_blocks((seed,), n_devices, samples_per_device,
+                            light_accs, heavy_acc)
+    return {k: v[0] for k, v in blocks.items()}
 
 
 def batched_device_streams(seeds, n_devices: int, samples_per_device: int,
                            light_accs, heavy_acc):
-    """Stacked streams for a whole sweep in one call.
+    """Stacked streams for a whole sweep in one vectorized call.
 
     Returns dict of ``(len(seeds), n_devices, samples_per_device[, P])``
     tensors whose per-seed slices are bitwise identical to
     ``device_streams(..., seed)`` — the batch axis feeds
-    ``jaxsim.run_sweep`` directly.
+    ``jaxsim.run_sweep`` / ``run_sweep_sharded`` directly.
     """
-    per_seed = [device_streams(n_devices, samples_per_device, light_accs,
-                               heavy_acc, seed) for seed in seeds]
-    return {k: np.stack([s[k] for s in per_seed])
-            for k in ("confidence", "correct_light", "correct_heavy")}
+    return _stream_blocks(tuple(seeds), n_devices, samples_per_device,
+                          light_accs, heavy_acc)

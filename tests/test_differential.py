@@ -162,7 +162,7 @@ def run_reference(cfg: DiffConfig, per_dev=None):
                       tier_ids=cfg.tier_ids, c_upper=cfg.c_upper)
 
 
-def run_jax(cfg: DiffConfig, stacked=None):
+def run_jax(cfg: DiffConfig, stacked=None, mesh=None):
     if stacked is None:
         _, stacked = _streams_of(cfg)
     spec = jaxsim.JaxSimSpec(
@@ -171,18 +171,30 @@ def run_jax(cfg: DiffConfig, stacked=None):
         init_threshold=cfg.init_threshold,
         static_threshold=cfg.static_threshold,
         model_switching=cfg.model_switching)
+    kw = dict(tier_ids=cfg.tier_ids, c_upper=cfg.c_upper,
+              offline_start=cfg.offline_start, offline_for=cfg.offline_for)
+    if mesh is not None:   # route through the sharded sweep engine
+        import jax
+        from repro.launch.mesh import n_lanes
+        # replicate the point once per lane: B=1 would fall back to the
+        # local path, and the point of this route is the sharded core
+        lanes = max(n_lanes(mesh), 2)
+        tiled = {k: np.broadcast_to(v, (lanes,) + v.shape)
+                 for k, v in stacked.items()}
+        out = jaxsim.run_sweep_sharded([spec] * lanes, tiled,
+                                       cfg.latencies, cfg.slos,
+                                       cfg.servers, mesh=mesh, **kw)
+        return jax.tree.map(lambda x: x[0], out)
     return jaxsim.run(spec, stacked, cfg.latencies, cfg.slos, cfg.servers,
-                      tier_ids=cfg.tier_ids, c_upper=cfg.c_upper,
-                      offline_start=cfg.offline_start,
-                      offline_for=cfg.offline_for)
+                      **kw)
 
 
-def compare(cfg: DiffConfig, *, trajectories=True):
+def compare(cfg: DiffConfig, *, trajectories=True, mesh=None):
     """Run both simulators, assert deviations against TOL, and return
     (ref, out) for any follow-up checks."""
     per_dev, stacked = _streams_of(cfg)   # generate each stream once
     ref = run_reference(cfg, per_dev)
-    out = run_jax(cfg, stacked)
+    out = run_jax(cfg, stacked, mesh=mesh)
     tol = TOL[cfg.scheduler]
     total = cfg.n * cfg.samples
 
@@ -243,6 +255,21 @@ def test_differential_model_switching(seed, scheduler):
         w = min(len(tr), len(ref.timeline["server_idx"]))
         np.testing.assert_array_equal(
             tr[:w - 1], np.asarray(ref.timeline["server_idx"][:w - 1]))
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "static"])
+def test_differential_sharded_path(scheduler):
+    """A differential config routed through ``run_sweep_sharded``: the
+    mesh dispatch (B padding, NamedSharding placement, shard_map) must
+    preserve the semantics the reference sim pins down. On one jax
+    device this exercises the 1-lane fallback; under CI's 4 emulated
+    hosts it runs the real sharded executable."""
+    import jax
+    from repro.launch.mesh import make_sweep_mesh
+    mesh = make_sweep_mesh((jax.device_count(),))
+    for seed in (2, 7):
+        compare(random_config(seed, scheduler, stress=bool(seed % 2)),
+                mesh=mesh)
 
 
 @pytest.mark.parametrize("scheduler", ["multitasc++", "multitasc", "static"])

@@ -2,19 +2,22 @@
 
 ``tests/golden/figures.json`` pins the behavioural metrics (satisfaction
 rate, accuracy, throughput, per-tier slices) of every sim figure at
-``--quick`` settings, captured from the pre-event-jump tick-grid core.
-This test re-runs the figures through the current engine and fails on
-drift beyond tolerance — proving the event-jump rewrite (and any future
-engine change) is behaviour-preserving end to end, not just on the unit
-level.
+``--quick`` settings, captured from the event-jump core with stream
+fixture v2 (``synthetic.STREAM_FIXTURE_VERSION``: SeedSequence-keyed
+vectorized generation — the v1 ``seed*1000+i`` per-device derivation
+collided across sweep seeds at n_devices >= 1000, so the fixture was
+regenerated at the bump). This test re-runs the figures through the
+current engine and fails on drift beyond tolerance — proving engine
+changes (event-jump rewrite, sharded sweep engine, ...) are
+behaviour-preserving end to end, not just on the unit level.
 
 Observed drift at the event-jump switchover: sr <= 4.31 (a knife-edge
 per-tier slice under overload; overall sr <= 1.6), acc <= 0.0024,
 throughput <= 0.5% relative — the tolerances below leave modest headroom
-over that. To re-capture after an *intentional* behaviour change:
+over that. To re-capture after an *intentional* behaviour change (e.g.
+a stream-fixture bump):
 
-    PYTHONPATH=src python -m benchmarks.run --quick > rows.csv
-    # then rebuild tests/golden/figures.json from rows.csv (same format)
+    PYTHONPATH=src python tools/capture_golden.py
 
 and document why in the commit message.
 """
@@ -48,34 +51,10 @@ def _family(key: str) -> str:
 
 @pytest.fixture(scope="module")
 def current_rows():
-    """All sim figures at --quick settings through the current engine."""
-    from benchmarks import common
-    old = (common.SEEDS, common.SAMPLES, common.DEVICE_COUNTS)
-    settings = json.loads(GOLDEN.read_text())["_settings"]
-    common.SEEDS = tuple(settings["seeds"])
-    common.SAMPLES = settings["samples"]
-    common.DEVICE_COUNTS = tuple(settings["device_counts"])
-    try:
-        from benchmarks import (ablation_components, fig4_homogeneous,
-                                fig7_heavy_server, fig10_convergence,
-                                fig11_heterogeneous, fig15_transformers,
-                                fig17_switching, fig19_intermittent)
-        rows = {}
-        for mod in (fig4_homogeneous, fig7_heavy_server, fig10_convergence,
-                    fig11_heterogeneous, fig15_transformers,
-                    fig17_switching, fig19_intermittent,
-                    ablation_components):
-            for row in mod.run():
-                if "probe" in row.name:   # perf probes, not behaviour
-                    continue
-                metrics = {}
-                for kv in row.derived.split(";"):
-                    k, v = kv.split("=")
-                    metrics[k] = float(v)
-                rows[row.name] = metrics
-        return rows
-    finally:
-        common.SEEDS, common.SAMPLES, common.DEVICE_COUNTS = old
+    """All sim figures at the fixture's settings through the current
+    engine — the same capture path tools/capture_golden.py writes with."""
+    from benchmarks.common import capture_figure_rows
+    return capture_figure_rows(json.loads(GOLDEN.read_text())["_settings"])
 
 
 def test_no_drift_vs_golden(current_rows):
@@ -110,6 +89,16 @@ def test_no_drift_vs_golden(current_rows):
                 failures.append(
                     f"{name}: {key} golden={gv:.4f} now={cv:.4f}")
     assert not failures, "golden drift:\n" + "\n".join(failures)
+
+
+def test_golden_fixture_version_current():
+    """A stream-derivation bump without a fixture re-capture would make
+    every drift failure below meaningless — fail fast on the version."""
+    from repro.sim.synthetic import STREAM_FIXTURE_VERSION
+    settings = json.loads(GOLDEN.read_text())["_settings"]
+    assert settings.get("stream_fixture") == STREAM_FIXTURE_VERSION, (
+        "stream fixture version changed; re-capture with "
+        "tools/capture_golden.py and document why")
 
 
 def test_golden_covers_all_figures(current_rows):

@@ -1,0 +1,159 @@
+"""Sharded sweep engine tests.
+
+``run_sweep_sharded`` must be bitwise-equal to ``run_sweep`` (and hence
+to serial ``run``) on a 1-device mesh by construction, and on a multi-
+device mesh because each shard runs the very same vmapped event core
+over its slice of lanes. Multi-shard cases run whenever jax sees more
+than one device (CI forces 4 via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and skip
+otherwise — the 1-lane fallback and padding logic are always covered.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.cascade_tiers import DEVICE_PROFILES, SERVER_PROFILES
+from repro.launch.mesh import make_sweep_mesh, n_lanes
+from repro.sim import jaxsim, synthetic
+
+DP = DEVICE_PROFILES["low"]
+SP = SERVER_PROFILES["inceptionv3"]
+N, SAMPLES = 8, 120
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 jax device (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count=4)")
+
+
+def _case(seeds=(0, 1, 2), sched="multitasc++"):
+    streams = synthetic.batched_device_streams(seeds, N, SAMPLES,
+                                               DP.accuracy, SP.accuracy)
+    spec = jaxsim.JaxSimSpec(scheduler=sched, n_devices=N,
+                             samples_per_device=SAMPLES,
+                             static_threshold=0.6)
+    args = (spec, streams, np.full(N, DP.latency), np.full(N, 0.15), (SP,))
+    return args
+
+
+def _assert_bitwise(a, b):
+    flat_a, _ = jax.tree.flatten(a)
+    flat_b, _ = jax.tree.flatten(b)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_one_device_mesh_is_bitwise_fallback():
+    args = _case()
+    ref = jaxsim.run_sweep(*args)
+    out = jaxsim.run_sweep_sharded(*args, mesh=make_sweep_mesh((1,)))
+    _assert_bitwise(ref, out)
+
+
+def test_mesh_none_is_run_sweep():
+    args = _case()
+    ref = jaxsim.run_sweep(*args)
+    out = jaxsim.run_sweep_sharded(*args, mesh=None)
+    _assert_bitwise(ref, out)
+
+
+@pytest.mark.parametrize("sched", ["multitasc++", "multitasc", "static"])
+def test_one_device_mesh_matches_serial(sched):
+    """Sharded (1-lane) == run_sweep == serial run, bitwise."""
+    seeds = (0, 1)
+    args = _case(seeds, sched)
+    out = jaxsim.run_sweep_sharded(*args, mesh=make_sweep_mesh((1,)))
+    for i, seed in enumerate(seeds):
+        streams = synthetic.device_streams(N, SAMPLES, DP.accuracy,
+                                           SP.accuracy, seed)
+        serial = jaxsim.run(args[0], streams, args[2], args[3], (SP,))
+        for k in ("sr", "accuracy", "throughput"):
+            assert float(serial[k]) == float(out[k][i]), (k, seed)
+        np.testing.assert_array_equal(np.asarray(serial["per_device_sr"]),
+                                      np.asarray(out["per_device_sr"][i]))
+
+
+@multi_device
+def test_multi_shard_bitwise_vs_unsharded():
+    lanes = jax.device_count()
+    seeds = tuple(range(2 * lanes))          # B divisible by lane count
+    args = _case(seeds)
+    ref = jaxsim.run_sweep(*args)
+    out = jaxsim.run_sweep_sharded(*args, mesh=make_sweep_mesh((lanes,)))
+    _assert_bitwise(ref, out)
+
+
+@multi_device
+def test_multi_shard_padding_indivisible_batch():
+    """B not divisible by the lane count: padded lanes must be dropped
+    from every output leaf, including traces and n_events."""
+    lanes = jax.device_count()
+    seeds = tuple(range(lanes + 1))          # forces padding
+    args = _case(seeds)
+    ref = jaxsim.run_sweep(*args)
+    out = jaxsim.run_sweep_sharded(*args, mesh=make_sweep_mesh((lanes,)))
+    assert np.asarray(out["sr"]).shape == (len(seeds),)
+    _assert_bitwise(ref, out)
+
+
+@multi_device
+def test_multi_shard_single_point_falls_back_local():
+    """B=1 on a multi-lane mesh: padding could only duplicate the point
+    onto every lane, so the engine must route it to the local B=1 fast
+    path — bitwise-equal and never counted as sharded."""
+    args = _case((0,))
+    ref = jaxsim.run_sweep(*args)
+    before = jaxsim.stats_snapshot()["sharded_points"]
+    out = jaxsim.run_sweep_sharded(*args,
+                                   mesh=make_sweep_mesh((jax.device_count(),)))
+    assert jaxsim.stats_snapshot()["sharded_points"] == before
+    assert np.asarray(out["sr"]).shape == (1,)
+    _assert_bitwise(ref, out)
+
+
+@multi_device
+def test_multi_shard_counts_sharded_points():
+    lanes = jax.device_count()
+    args = _case(tuple(range(lanes)))
+    before = jaxsim.stats_snapshot()["sharded_points"]
+    jaxsim.run_sweep_sharded(*args, mesh=make_sweep_mesh((lanes,)))
+    assert jaxsim.stats_snapshot()["sharded_points"] == before + lanes
+
+
+@multi_device
+def test_sharded_one_compile_per_structure():
+    """Traced scalars (scheduler kind, thresholds, gains) must not leak
+    into the sharded core's compile key either."""
+    lanes = jax.device_count()
+    n, samples = 11, 70                      # unique static structure
+    mesh = make_sweep_mesh((lanes,))
+    lat, slo = np.full(n, DP.latency), np.full(n, 0.15)
+    seeds = tuple(range(lanes))
+    streams = synthetic.batched_device_streams(seeds, n, samples,
+                                               DP.accuracy, SP.accuracy)
+
+    def sweep(**kw):
+        kw.setdefault("scheduler", "multitasc++")
+        spec = jaxsim.JaxSimSpec(n_devices=n, samples_per_device=samples,
+                                 **kw)
+        out = jaxsim.run_sweep_sharded(spec, dict(streams), lat, slo, (SP,),
+                                       mesh=mesh)
+        return float(np.asarray(out["sr"])[0])
+
+    sweep()
+    warm = jaxsim.stats_snapshot()
+    for kw in (dict(a=0.01), dict(init_threshold=0.1),
+               dict(scheduler="multitasc"),
+               dict(scheduler="static", static_threshold=0.5)):
+        sweep(**kw)
+    after = jaxsim.stats_snapshot()
+    assert after["cores_built"] == warm["cores_built"]
+    assert after["backend_compiles"] == warm["backend_compiles"]
+
+
+def test_n_lanes_helpers():
+    assert n_lanes(None) == 1
+    assert n_lanes(make_sweep_mesh((1,))) == 1
+    m = make_sweep_mesh((jax.device_count(),))
+    assert n_lanes(m) == jax.device_count()

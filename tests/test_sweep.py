@@ -27,6 +27,32 @@ def test_batched_streams_match_per_seed():
             np.testing.assert_array_equal(batched[k][i], single[k], err_msg=k)
 
 
+@pytest.mark.parametrize("light,heavy", [
+    (0.72, 0.78),                                   # scalar accs
+    (np.linspace(0.6, 0.8, N), [0.78, 0.84]),       # per-device + 2 servers
+])
+def test_vectorized_streams_match_loop_reference(light, heavy):
+    """The single-pass generation (batched bisection alpha-fit + block
+    draws) is bitwise-identical to its per-seed/per-device loop spec."""
+    vec = synthetic.batched_device_streams(SEEDS, N, SAMPLES, light, heavy)
+    ref = synthetic._reference_stream_blocks(SEEDS, N, SAMPLES, light,
+                                             heavy)
+    for k in ("confidence", "correct_light", "correct_heavy"):
+        np.testing.assert_array_equal(vec[k], ref[k], err_msg=k)
+
+
+def test_seed_derivation_no_cross_seed_collision():
+    """Regression for the v1 ``seed*1000 + i`` derivation: sweep seed 0's
+    device 1000 replayed sweep seed 1's device 0. SeedSequence-keyed
+    block draws (fixture v2) must keep large fleets independent."""
+    n, m = 1001, 8
+    s0 = synthetic.device_streams(n, m, 0.72, 0.8, 0)
+    s1 = synthetic.device_streams(n, m, 0.72, 0.8, 1)
+    assert not np.array_equal(s0["confidence"][1000], s1["confidence"][0])
+    # and a sanity check that the fixture version is declared
+    assert synthetic.STREAM_FIXTURE_VERSION >= 2
+
+
 @pytest.mark.parametrize("sched", ["multitasc++", "multitasc", "static"])
 def test_sweep_matches_serial_bitwise(sched):
     lat, slo = _args()

@@ -1,0 +1,41 @@
+"""Re-capture ``tests/golden/figures.json`` from the current engine.
+
+Run this ONLY after an *intentional* behaviour change (a new stream
+fixture version, a semantic change to the simulator), and say why in the
+commit message — the golden test exists to catch unintentional drift.
+
+    PYTHONPATH=src python tools/capture_golden.py [--out tests/golden/figures.json]
+
+Settings (seeds/samples/device_counts) are read from the existing
+fixture so a re-capture never silently changes coverage; the stream
+fixture version is stamped from ``synthetic.STREAM_FIXTURE_VERSION``.
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="tests/golden/figures.json")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    from benchmarks.common import capture_figure_rows
+    from repro.sim.synthetic import STREAM_FIXTURE_VERSION
+    old = json.loads(out.read_text())
+    settings = dict(old["_settings"])
+    settings["source"] = "event-jump core"
+    settings["stream_fixture"] = STREAM_FIXTURE_VERSION
+    rows = capture_figure_rows(settings)
+    out.write_text(json.dumps({"_settings": settings, "rows": rows},
+                              indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out} ({len(rows)} rows, "
+          f"stream fixture v{STREAM_FIXTURE_VERSION})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

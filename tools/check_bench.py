@@ -3,9 +3,17 @@
 
 Hard failures (exit 1):
   * a figure's ``n_compiles`` exceeds the baseline — the static/traced
-    split leaked a traced value into a compile key;
+    split leaked a traced value into a compile key (the committed
+    baseline pins fig4/fig17 at their justified minimum: one event-core
+    executable each; fig4's old 5 and fig17's old 3 were throwaway
+    ``jit(convert_element_type)`` dispatches from host-side
+    ``jnp.asarray`` calls);
   * a figure's ``n_points`` changed — sweep coverage silently shrank
-    or grew without the baseline being re-captured.
+    or grew without the baseline being re-captured;
+  * a figure's ``n_shards`` differs from the baseline — the run didn't
+    exercise the sharded sweep path the baseline was captured with
+    (check ``--mesh-shape`` and ``XLA_FLAGS=--xla_force_host_platform_
+    device_count``).
 
 Wall time is reported but only warned about by default (CI machines are
 too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
@@ -46,6 +54,17 @@ def main() -> int:
             failures.append(
                 f"{fig}: n_points {n['n_points']} != baseline "
                 f"{b['n_points']} (sweep coverage changed)")
+        if "n_shards" in b and n.get("n_shards") != b["n_shards"]:
+            failures.append(
+                f"{fig}: n_shards {n.get('n_shards')} != baseline "
+                f"{b['n_shards']} (sharded sweep path not exercised "
+                f"as captured)")
+        if "n_points_sharded" in b and \
+                n.get("n_points_sharded") != b["n_points_sharded"]:
+            failures.append(
+                f"{fig}: n_points_sharded {n.get('n_points_sharded')} != "
+                f"baseline {b['n_points_sharded']} (points silently moved "
+                f"on/off the sharded core)")
         if b.get("wall_s"):
             ratio = n["wall_s"] / b["wall_s"]
             line = (f"{fig}: wall {n['wall_s']:.3f}s vs baseline "

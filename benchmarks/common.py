@@ -5,7 +5,7 @@ prints them as ``name,us_per_call,derived`` CSV (us_per_call = wall time
 of the sim/kernel call per sweep point; derived = the figure's metrics).
 
 All sim figures go through ``sweep`` below: the seeds of one sweep point
-run batched in a single vmapped call — sharded over ``MESH`` when
+run batched in a single lane-aligned call — sharded over ``MESH`` when
 ``benchmarks/run.py --mesh-shape`` configured one — and sample streams
 are cached so the schedulers of one figure share them instead of
 regenerating.

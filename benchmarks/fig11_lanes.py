@@ -1,0 +1,111 @@
+"""Lane-alignment probe: wall-per-point of the batched event engine at
+B in {1, 8, 64}.
+
+The lane-aligned core's contract is that batching is (nearly) free per
+point: one flat while_loop advances every lane independently, so
+wall-per-point at B=8 must sit within ~10% of B=1 (the old vmapped
+engine paid 2.3x: a whole-carry select per iteration plus window-level
+lane synchronization) and B=64 must be no slower per point than B=1.
+This row measures exactly that and exports the ratios for
+``tools/check_bench.py`` to gate (``ratio_b8`` / ``ratio_b64``,
+hard-failed above ``LANE_RATIO_LIMIT``; ``n_compiles`` is pinned at one
+executable per batch shape by the generic gate).
+
+Deliberately measured through the LOCAL ``run_sweep`` (never the mesh):
+this is a lane-alignment probe — sharded scale-out is fig11_scaleout's
+job, and a mesh would hand different host counts to different B. For
+the same reason the probe refuses to run on a partitioned host
+(``--xla_force_host_platform_device_count`` splits the core budget per
+emulated device and distorts B-dependent threading, ~2.4x apparent
+ratio_b8 on a 2-core box): it returns no rows there, and CI measures
+it in a separate unpartitioned step gated against the same baseline.
+
+The property gated here is *structural*: per-iteration work grows
+linearly in B because the flat loop's trips are max-over-lanes, with no
+whole-carry select. XLA CPU's intra-op threading muddies that signal at
+mid-size B on few-core hosts (a (8, 128) elementwise op just crosses
+the split threshold, paying cross-core sync per op: observed ratio_b8
+~1.7 free-running vs ~0.9 pinned on the same 2-core machine, pure
+artifact). The baseline and the CI step therefore measure under
+``taskset -c 0``; run it pinned when re-capturing.
+"""
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import DEVICE_PROFILES, SERVER_PROFILES, Row
+from repro.sim import jaxsim
+
+SLO = 0.15
+N = 25
+BATCHES = (1, 8, 64)
+ROUNDS = 5
+
+# populated by run(); benchmarks/run.py merges it into the bench json
+EXTRA_JSON = {}
+
+
+def run():
+    EXTRA_JSON.clear()
+    if jax.device_count() > 1:
+        print("# fig11_lanes: skipped — lane-gap timing needs an "
+              "undivided host (run without "
+              "--xla_force_host_platform_device_count)", file=sys.stderr)
+        return []
+    dev = DEVICE_PROFILES["low"]
+    srv = SERVER_PROFILES["inceptionv3"]
+    lat, slo = np.full(N, dev.latency), np.full(N, SLO)
+    spec = jaxsim.JaxSimSpec(scheduler="multitasc++", n_devices=N,
+                             samples_per_device=common.SAMPLES)
+    # every B times the SAME per-point workload mix — seeds 0..7, tiled
+    # for B=64 and timed one-at-a-time for B=1 — so the gated ratios
+    # isolate the engine's per-iteration batching cost from single-seed
+    # event-count variance
+    base_seeds = tuple(range(8))
+    seeds = {1: base_seeds, 8: base_seeds,
+             64: tuple(s % 8 for s in range(64))}
+    streams = {b: common.cached_streams(seeds[b], N, common.SAMPLES,
+                                        dev.accuracy, (srv.accuracy,))
+               for b in BATCHES}
+    one = {s: common.cached_streams((s,), N, common.SAMPLES, dev.accuracy,
+                                    (srv.accuracy,)) for s in base_seeds}
+
+    def sweep_points(b):
+        """One timed pass over the workload; B=1 runs its 8 seeds
+        serially. Returns (per-point outputs, points run)."""
+        if b == 1:
+            outs = [jaxsim.run_sweep(spec, one[s], lat, slo, (srv,))
+                    for s in base_seeds]
+            return outs, len(base_seeds)
+        return [jaxsim.run_sweep(spec, streams[b], lat, slo, (srv,))], b
+
+    outs = {b: sweep_points(b)[0] for b in BATCHES}     # compile each B once
+    # interleaved rounds: machine-load drift over the probe window hits
+    # every B equally instead of biasing whichever ran last; min-of-
+    # rounds is the noise-robust estimator the ratio gate relies on
+    wpp = {b: np.inf for b in BATCHES}                  # per-point wall
+    for _ in range(ROUNDS):
+        for b in BATCHES:
+            t0 = time.perf_counter()
+            _, n_pts = sweep_points(b)
+            wpp[b] = min(wpp[b], (time.perf_counter() - t0) / n_pts)
+    rows = []
+    for b in BATCHES:
+        srs = np.concatenate([np.asarray(o["sr"], np.float64).ravel()
+                              for o in outs[b]])
+        evs = np.concatenate([np.asarray(o["n_events"]).ravel()
+                              for o in outs[b]])
+        rows.append(Row(
+            f"fig11_lanes/b{b}", wpp[b] * 1e6,
+            f"sr={srs.mean():.2f};events_per_pt={float(evs.mean()):.0f}"))
+    EXTRA_JSON.update({
+        f"wpp_b{b}_us": round(wpp[b] * 1e6, 1) for b in BATCHES})
+    EXTRA_JSON["ratio_b8"] = round(wpp[8] / wpp[1], 3)
+    EXTRA_JSON["ratio_b64"] = round(wpp[64] / wpp[1], 3)
+    rows.append(Row("fig11_lanes/gap_probe", wpp[8] * 1e6,
+                    f"ratio_b8={EXTRA_JSON['ratio_b8']};"
+                    f"ratio_b64={EXTRA_JSON['ratio_b64']}"))
+    return rows

@@ -32,9 +32,13 @@ _DTYPE_BYTES = {
 }
 
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
-_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# tolerant of whitespace in the config dict: XLA releases have flipped
+# between {"n":"7"} and {"n": "7"} style
+_TRIP_CFG = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+# the leading % on instruction names is optional (newer XLA text drops
+# it in some render modes), and so is a dtype suffix after the dims
 _INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
     r"((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
     r"([\w\-]+)\(")
 _SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
@@ -111,7 +115,7 @@ def parse_computations(hlo_text: str) -> Dict[str, Computation]:
             cur.shapes[ins.name] = ins.type_str
         else:
             # parameter lines etc: still record shapes when possible
-            pm = re.match(r"\s*%([\w\.\-]+)\s*=\s*"
+            pm = re.match(r"\s*%?([\w\.\-]+)\s*=\s*"
                           r"((?:\([^)]*\))|(?:[\w\d]+\[[^\]]*\]"
                           r"(?:\{[^}]*\})?))\s*parameter", line)
             if pm:
@@ -132,7 +136,9 @@ def _trip_count(cond: Computation) -> int:
 def _operands(line: str) -> List[str]:
     """Top-level operand names of an instruction line."""
     start = line.index("(")
-    depth = 0
+    depth = 0   # paren depth
+    nest = 0    # bracket/brace depth: commas inside a shape's dims
+                # ("f32[4,16]{1,0}") are not operand separators
     out, cur = [], ""
     for ch in line[start:]:
         if ch == "(":
@@ -146,26 +152,38 @@ def _operands(line: str) -> List[str]:
                     out.append(cur.strip())
                 break
         if depth >= 1:
-            if ch == "," and depth == 1:
+            if ch in "[{":
+                nest += 1
+            elif ch in "]}":
+                nest -= 1
+            if ch == "," and depth == 1 and nest == 0:
                 out.append(cur.strip())
                 cur = ""
             else:
                 cur += ch
-    # operand tokens may carry an inline type ("f32[32,128]{1,0} %name")
-    # or be bare ("%name"); keep the full token, extract names on demand
-    return [o for o in out if "%" in o]
+    # operand tokens may carry an inline type ("f32[32,128]{1,0} %name"),
+    # be bare ("%name"), or lack the % sigil entirely (some render
+    # modes); keep the full token, extract names on demand
+    return [o for o in out if _operand_name(o)]
 
 
 def _operand_name(token: str) -> str:
     m = re.search(r"%([\w\.\-]+)", token)
+    if m:
+        return m.group(1)
+    # %-less render modes: the name is the trailing identifier (an
+    # inline type, if any, precedes it)
+    m = re.search(r"([\w\.\-]+)\s*$", token)
     return m.group(1) if m else ""
 
 
 def _operand_type(token: str, comp: "Computation") -> str:
     """Inline operand type if present, else the recorded definition type."""
-    if _SHAPE.search(token.split("%")[0]):
-        return token.split("%")[0]
-    return comp.shapes.get(_operand_name(token), "")
+    name = _operand_name(token)
+    head = token[:token.rfind(name)] if name else token
+    if _SHAPE.search(head):
+        return head
+    return comp.shapes.get(name, "")
 
 
 def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
@@ -188,6 +206,67 @@ def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
     for o in ops[:2]:
         byts += _shape_bytes(_operand_type(o, comp))
     return flops, byts
+
+
+@dataclasses.dataclass
+class FormatDiagnostics:
+    """How well the regex parser understood an HLO text dump.
+
+    The HLO text format drifts between XLA releases (inline operand
+    types appeared in jax 0.4.37, trip counts moved between a condition
+    constant and a ``known_trip_count`` backend-config annotation, the
+    ``%`` name sigil is optional in some render modes). Tests use this
+    to *skip loudly* instead of asserting garbage when the dump stops
+    being recognized — see tests/test_distributed.py.
+    """
+    n_computations: int = 0
+    n_instructions: int = 0
+    entry_found: bool = False
+    n_dot_raw: int = 0       # textual "dot("/"dot-general(" occurrences
+    n_dot_parsed: int = 0    # dots the structured parser extracted
+    n_dot_typed: int = 0     # parsed dots whose lhs operand type resolved
+    n_while_raw: int = 0
+    n_while_parsed: int = 0
+    n_trips_annotated: int = 0   # whiles with a known_trip_count config
+
+    @property
+    def recognized(self) -> bool:
+        """The parser saw the structure the raw text says is there.
+
+        ``n_dot_typed`` must match ``n_dot_parsed``: a dot whose lhs
+        operand type cannot be resolved silently contributes k=1 to the
+        FLOP count — the most dangerous drift mode, because the parse
+        "succeeds" with garbage numbers.
+        """
+        return (self.entry_found and self.n_instructions > 0
+                and self.n_dot_parsed >= self.n_dot_raw
+                and self.n_dot_typed == self.n_dot_parsed
+                and self.n_while_parsed >= self.n_while_raw)
+
+
+def diagnose(hlo_text: str) -> FormatDiagnostics:
+    """Parse-health probe: structured-parser counts vs raw text counts."""
+    comps = parse_computations(hlo_text)
+    entry = comps.pop("__entry__", None)
+    d = FormatDiagnostics(
+        n_computations=len(comps),
+        n_instructions=sum(len(c.instrs) for c in comps.values()),
+        entry_found=entry is not None,
+        n_dot_raw=len(re.findall(r"\bdot(?:-general)?\(", hlo_text)),
+        n_while_raw=len(re.findall(r"\bwhile\(", hlo_text)),
+    )
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "dot-general"):
+                d.n_dot_parsed += 1
+                ops = _operands(ins.line)
+                if ops and _operand_type(ops[0], comp):
+                    d.n_dot_typed += 1
+            elif ins.opcode == "while":
+                d.n_while_parsed += 1
+                if _TRIP_CFG.search(ins.line):
+                    d.n_trips_annotated += 1
+    return d
 
 
 @dataclasses.dataclass

@@ -1,5 +1,5 @@
 """Vectorized closed-loop simulator: the full multi-device cascade as one
-jit-compiled window loop, batchable over sweep points with ``vmap``.
+jit-compiled lane-aligned event loop, batched over sweep points.
 
 Everything the event simulator (repro.sim.events) does — device sample
 streams, Eq. 3 forwarding decisions, the server request queue, dynamic
@@ -42,10 +42,53 @@ tick grid):
   ``t - dt``); launches are back-to-back with the previous batch when
   the queue is backed up, and instantaneous on arrival when the server
   is idle;
-* the inner loop is a ``lax.while_loop`` bounded by the static
+* the loop is a ``lax.while_loop`` bounded by the static
   ``max_events_per_window`` cap (a safety valve, not a cost: it bounds
   *possible* iterations at 2 * n_pad * samples — one completion plus at
   most one launch per sample — while the loop only runs actual events).
+
+Lane-aligned batched loop
+-------------------------
+A B-point sweep runs ONE flat ``lax.while_loop`` whose carry is a dict
+of (B, ...) arrays — the while_loop itself is never ``vmap``ped. Under
+a vmapped while_loop each iteration pays a select over the *whole*
+carry (3 queue buffers of ``cap`` entries per lane, every iteration)
+to freeze finished lanes, and nested window/event loops synchronize
+all lanes at every window boundary: a lane that drained its window's
+events idles until the slowest lane catches up. The lane-aligned
+engine instead advances every lane independently to its own next
+event:
+
+* each lane carries an ``active`` flag, its event-time ``frontier``
+  (pre-extracted: recomputed only by the event that moves it), its
+  window index ``w`` and per-window event count ``k`` — the global loop
+  condition is a cheap ``any(active)``, not a full-state merge;
+* an iteration applies the event step to every lane whose frontier
+  falls inside its current window, with ``where``-masks only on the
+  fields that event touches (queue writes are n-sized scatters, never
+  cap-sized selects); lanes with no event due are bitwise frozen;
+* window boundaries (scheduler update, switching, trace row) run in a
+  ``lax.cond`` that fires only on iterations where some lane's
+  frontier left its window, and exchanges only the handful of small
+  fields a boundary touches (``BOUNDARY_FIELDS`` + one trace row) —
+  event-only iterations skip all scheduler math;
+* loop trips are max-over-lanes of (events + windows) instead of
+  sum-over-windows of max-over-lanes, so heterogeneous lane mixes
+  (different schedulers, device counts, offline windows, durations in
+  one batch) never wait on each other.
+
+B=1 is the degenerate case of the same code — there is no separate
+serial core (the old B=1 bypass existed only to dodge the vmapped
+carry select) — and a lane's results are bitwise independent of B and
+of which other lanes share the batch (tests/test_lanes.py). One caveat
+scopes that guarantee: the window *budget* is pooled from the batch's
+slowest lane (``n_windows`` is static), so a lane that drains inside
+its own duration is unaffected by companions (it early-exits at the
+same event either way), but a lane still congested at its own
+duration cap would keep simulating into a slower companion's surplus
+windows. The default ``extra_time`` (40 s) exists to make draining
+the universal case; don't batch deliberately-truncated runs with
+longer ones if the truncation point must be preserved.
 
 Static/traced split
 -------------------
@@ -83,10 +126,10 @@ To keep the static key coarse, the engine additionally:
 
 Sharding / placement design (``run_sweep_sharded``)
 ---------------------------------------------------
-``run_sweep`` vmaps the B sweep points on one device. At production
-scale (1000s of points) the sweep axis itself becomes the parallel
-resource, so ``run_sweep_sharded(..., mesh=...)`` shards the leading B
-axis over a ``jax.sharding`` mesh:
+``run_sweep`` runs the B sweep points' lanes on one device. At
+production scale (1000s of points) the sweep axis itself becomes the
+parallel resource, so ``run_sweep_sharded(..., mesh=...)`` shards the
+leading B axis over a ``jax.sharding`` mesh:
 
 * the batch axes come from ``launch.mesh.batch_axes_of(mesh)`` (every
   mesh axis except ``model``), and B is padded up to a multiple of the
@@ -95,10 +138,10 @@ axis over a ``jax.sharding`` mesh:
 * inputs are placed with ``NamedSharding(mesh, P(batch_axes))`` via
   ``jax.device_put`` *before* the call (a pure transfer: no throwaway
   jit ops hit the compile counters) and the per-point arrays enter a
-  ``shard_map`` whose body is the same vmapped event core ``run_sweep``
-  uses — each shard runs its own independent ``while_loop`` over its
-  B/n_shards lanes, so there is no cross-shard synchronization per
-  event, only at exit;
+  ``shard_map`` whose body is the same lane-aligned event core
+  ``run_sweep`` uses — each shard runs its own independent
+  ``while_loop`` over its B/n_shards lanes, so there is no cross-shard
+  synchronization per event, only at exit;
 * server profile tables are replicated (``P()``); stream buffers stay
   donated exactly as in the unsharded path;
 * a mesh whose lane count is 1 (or ``mesh=None``), and a B=1 sweep —
@@ -117,10 +160,14 @@ sweep points in one call:
 
 * ``specs``: one ``JaxSimSpec`` (broadcast over the batch) or a sequence
   of B specs that must share their static structure (a ``ValueError``
-  otherwise). Schedulers, thresholds, gains etc. may differ per point.
+  otherwise). Schedulers, thresholds, gains — and ``n_devices``, which
+  is traced — may differ per point.
 * ``streams``: dict with ``confidence``/``correct_light`` of shape
   ``(B, N, S)`` (or ``(N, S)``, broadcast) and ``correct_heavy`` of shape
-  ``(B, N, S, P)``; see ``synthetic.batched_device_streams``.
+  ``(B, N, S, P)``; see ``synthetic.batched_device_streams``. ``N`` is
+  the widest lane's device count: a narrower lane's rows beyond its own
+  ``n_devices`` are forced inert (infinite latency) and its per-device
+  outputs beyond ``n_devices`` are meaningless padding.
 * ``dev_latency``/``slo``/``tier_ids``/``offline_*``: ``(N,)`` shared or
   ``(B, N)`` per-point; ``c_upper``: ``(n_tiers,)`` or ``(B, n_tiers)``.
   Latency profiles may differ freely across points: the simulated
@@ -131,12 +178,11 @@ sweep points in one call:
   ...), plus ``n_events`` — the number of event-loop iterations per
   point. Trace rows for windows after the early exit are NaN.
 
-The core ``vmap``s the window loop over the batch axis and donates the
-stream buffers to the computation. Trace accumulation is window-wise: the
-outer while loop writes one trace row per window (mean threshold, window
-SR, active fraction, server index, cumulative forwarded count, running
-accuracy), with an inner event-jump ``lax.while_loop`` inside the window
-carrying only the simulator state.
+The core runs the flat lane-aligned loop over the batch axis (see
+"Lane-aligned batched loop") and donates the stream buffers to the
+computation. Trace accumulation is window-wise: each lane's boundary
+step writes one trace row per window (mean threshold, window SR, active
+fraction, server index, cumulative forwarded count, running accuracy).
 
 Semantics vs. the event simulator (cross-validated in
 tests/test_differential.py):
@@ -220,7 +266,7 @@ class JaxSimStatic:
 @dataclasses.dataclass
 class SweepStats:
     """Process-wide counters for benchmark/regression accounting."""
-    cores_built: int = 0        # distinct (static, vmapped) cores traced
+    cores_built: int = 0        # distinct (static,) lane cores traced
     backend_compiles: int = 0   # XLA backend_compile events (all of jax)
     points: int = 0             # sweep points simulated
     events: int = 0             # event-loop iterations across all points
@@ -247,11 +293,13 @@ def stats_snapshot() -> Dict[str, int]:
     return dataclasses.asdict(stats)
 
 
-def _static_of(spec: JaxSimSpec, n_servers: int,
-               max_lat: float) -> JaxSimStatic:
+def _static_of(spec: JaxSimSpec, n_servers: int, max_lat: float,
+               n_stream: int | None = None) -> JaxSimStatic:
     duration = max_lat * spec.samples_per_device + spec.extra_time
     duration = -(-duration // DURATION_QUANTUM) * DURATION_QUANTUM
-    n_pad = -(-spec.n_devices // N_BUCKET) * N_BUCKET
+    # bucket from the packed stream width: lanes with different device
+    # counts (n_real is traced) share one static structure and one core
+    n_pad = -(-(n_stream or spec.n_devices) // N_BUCKET) * N_BUCKET
     # every event-loop iteration consumes a device completion and/or
     # launches a batch over >= 1 queued sample, so 2 * samples + slack
     # bounds the whole sim; per-window it is a pure safety valve
@@ -324,15 +372,22 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
         cl = np.broadcast_to(cl, (b,) + cl.shape[1:])
         ch = np.broadcast_to(ch, (b,) + ch.shape[1:])
 
-    n, s = specs[0].n_devices, specs[0].samples_per_device
+    # device counts may differ per lane (n_real is traced): streams come
+    # packed at the widest lane's width and narrower lanes' extra rows
+    # are forced inert below. samples_per_device is a static shape and
+    # must be shared.
+    n = max(sp.n_devices for sp in specs)
+    s = specs[0].samples_per_device
     if conf.shape != (b, n, s):
-        raise ValueError(f"streams shape {conf.shape} != {(b, n, s)}")
-    bad = [(sp.n_devices, sp.samples_per_device) for sp in specs
-           if (sp.n_devices, sp.samples_per_device) != (n, s)]
-    if bad:  # bucketing would mask this: phantom devices dilute metrics
+        raise ValueError(f"streams shape {conf.shape} != {(b, n, s)}"
+                         " (device axis = widest lane)")
+    bad = [sp.samples_per_device for sp in specs
+           if sp.samples_per_device != s]
+    if bad:  # a shape mismatch the bucketing would silently absorb
         raise ValueError(
-            f"all specs must share (n_devices, samples_per_device)=({n}, {s});"
+            f"all specs must share samples_per_device={s};"
             f" got {sorted(set(bad))}")
+    n_real = np.asarray([sp.n_devices for sp in specs], np.int32)
 
     def per_point(x, fill, dtype, width, pad_fill=None):
         arr = (np.full((width,), fill, dtype) if x is None
@@ -347,11 +402,13 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
         return arr
 
     dev_lat_real = per_point(dev_latency, 0.0, np.float32, n)
-    # the window count covers the slowest device of the whole batch;
-    # faster points just early-exit sooner (latencies are fully traced)
-    max_lat = float(dev_lat_real.max())
+    # the window count covers the slowest REAL device of the whole batch
+    # (a narrower lane's rows beyond its own n_devices are junk); faster
+    # points just early-exit sooner (latencies are fully traced)
+    real_mask = np.arange(n)[None, :] < n_real[:, None]
+    max_lat = float(dev_lat_real[real_mask].max())
 
-    statics = {_static_of(sp, len(servers), max_lat) for sp in specs}
+    statics = {_static_of(sp, len(servers), max_lat, n) for sp in specs}
     if len(statics) != 1:
         raise ValueError(
             "run_sweep points must share static structure; got "
@@ -367,9 +424,13 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
         out[:, :n] = x
         return out
 
-    # padded devices are inert: infinite latency -> never complete
+    # devices beyond each lane's own n_devices are inert: infinite
+    # latency -> never complete (covers both the bucket padding and a
+    # narrower lane's tail in a mixed-device-count batch)
     dev_lat = per_point(dev_lat_real, 0.0, np.float32, n_pad,
                         pad_fill=np.inf)
+    dev_lat = np.where(np.arange(n_pad)[None, :] < n_real[:, None],
+                       dev_lat, np.inf).astype(np.float32)
     slo_b = per_point(slo, 0.0, np.float32, n_pad)
     tier_b = per_point(tier_ids, 0, np.int32, n_pad)
     if int(tier_b.max()) + 1 > MAX_TIERS:
@@ -378,7 +439,7 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     off_start_b = per_point(offline_start, np.inf, np.float32, n_pad)
     off_for_b = per_point(offline_for, 0.0, np.float32, n_pad)
 
-    plist = [_params_of(sp, servers, float(slo_b[i, :n].min()))
+    plist = [_params_of(sp, servers, float(slo_b[i, :sp.n_devices].min()))
              for i, sp in enumerate(specs)]
     params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
     # numpy on purpose: jnp.asarray on host lists/views dispatches tiny
@@ -412,7 +473,7 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
               dev_latency, slo, servers: Sequence[ServerProfile], *,
               tier_ids=None, c_upper=None, offline_start=None,
               offline_for=None):
-    """Batched sweep: B points through one vmapped, jit-compiled core.
+    """Batched sweep: B points through one lane-aligned, jit-compiled core.
 
     See the module docstring for the full contract. All points must share
     static structure; traced values (scheduler kind, thresholds, gains,
@@ -426,19 +487,13 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
 
 
 def _run_local(static, params, srv, arrays, b, n):
-    if b == 1:
-        # B=1 skips vmap: the batched while_loop pays a per-iteration
-        # select over the whole carry even for a single lane, roughly
-        # doubling the cost of the event loop (results are bitwise
-        # identical either way — see test_sweep_matches_serial_bitwise).
-        core = _make_core_single(static)
-        args = (jax.device_put({k: v[0] for k, v in params.items()}),
-                jax.device_put(srv),
-                *(jax.device_put(a[0]) for a in arrays))
-    else:
-        core = _make_core(static)
-        args = (jax.device_put(params), jax.device_put(srv),
-                *(jax.device_put(a) for a in arrays))
+    # B=1 is the degenerate case of the same lane-aligned core (the old
+    # serial bypass is gone: without a vmapped while_loop there is no
+    # whole-carry select for a single lane to dodge — see
+    # benchmarks/fig11_lanes.py for the measured B=1 parity)
+    core = _make_core(static)
+    args = (jax.device_put(params), jax.device_put(srv),
+            *(jax.device_put(a) for a in arrays))
     with warnings.catch_warnings():
         # scoped to this jit call only: the *local* path may legitimately
         # fail to alias donated stream buffers on some backends (the copy
@@ -447,8 +502,6 @@ def _run_local(static, params, srv, arrays, b, n):
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         out = core(*args)
-    if b == 1:
-        out = jax.tree.map(lambda x: np.asarray(x)[None], out)
     return _finalize(out, b, n)
 
 
@@ -500,83 +553,56 @@ def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
 
 
 @functools.lru_cache(maxsize=256)
-def _vmapped_core(static: JaxSimStatic):
-    single = functools.partial(_run_core, static)
-    return jax.vmap(single, in_axes=(0, None) + (0,) * 9)
-
-
-@functools.lru_cache(maxsize=256)
 def _make_core(static: JaxSimStatic):
     stats.cores_built += 1
-    return jax.jit(_vmapped_core(static), donate_argnums=(2, 3, 4))
-
-
-@functools.lru_cache(maxsize=256)
-def _make_core_single(static: JaxSimStatic):
-    stats.cores_built += 1
-    return jax.jit(functools.partial(_run_core, static),
+    return jax.jit(functools.partial(_run_core_lanes, static),
                    donate_argnums=(2, 3, 4))
 
 
 @functools.lru_cache(maxsize=256)
 def _make_core_sharded(static: JaxSimStatic, mesh):
-    """One executable per (static structure, mesh): the vmapped core runs
-    inside ``shard_map``, so each shard's event loop is independent —
+    """One executable per (static structure, mesh): the lane-aligned core
+    runs inside ``shard_map``, so each shard's event loop is independent —
     no cross-shard collective per event, only the final gather."""
     stats.cores_built += 1
     bspec = jax.sharding.PartitionSpec(tuple(batch_axes_of(mesh)))
     rep = jax.sharding.PartitionSpec()
     # check_vma=False: the body is collective-free (each shard loops over
     # its own lanes), and the replication checker has no rule for while
-    sharded = shard_map(_vmapped_core(static), mesh=mesh,
-                        in_specs=(bspec, rep) + (bspec,) * 9,
+    sharded = shard_map(functools.partial(_run_core_lanes, static),
+                        mesh=mesh, in_specs=(bspec, rep) + (bspec,) * 9,
                         out_specs=bspec, check_vma=False)
     return jax.jit(sharded, donate_argnums=(2, 3, 4))
 
 
-def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
-              c_upper, off_start, off_for):
+# carry fields a window boundary touches: the boundary lax.cond passes
+# exactly these (plus the trace row) so event-only iterations never copy
+# or recompute anything else
+BOUNDARY_FIELDS = ("thresh", "mult", "win_met", "win_total", "server_idx",
+                   "w", "k", "active")
+
+
+def _engine_fns(static: JaxSimStatic):
+    """Per-lane (unbatched) engine pieces of the lane-aligned event loop.
+
+    Each function sees ONE lane's state dict plus that lane's traced
+    constants ``c`` (per-point scalars + device vectors + streams) and a
+    scalar ``go`` saying whether the lane takes this step; every write is
+    masked by ``go`` so a held lane is bitwise frozen. ``_run_core_lanes``
+    vmaps these over the flat (B, ...) carry — the ``lax.while_loop``
+    itself is never vmapped, so there is no whole-carry select and no
+    cross-lane window synchronization.
+    """
     n, s = static.n_pad, static.samples_per_device
     window, cap = static.window, static.cap
-    base_lat, scaling = srv["base_lat"], srv["scaling"]
-    max_batch = srv["max_batch"]
     ladder = jnp.asarray(BATCH_LADDER, jnp.int32)
-    valid = jnp.arange(n) < params["n_real"]
-    n_real_f = params["n_real"].astype(jnp.float32)
-    init_thresh = jnp.where(params["scheduler"] == SCHED_CODES["static"],
-                            params["static_threshold"],
-                            params["init_threshold"])
-    off_end = off_start + off_for
 
-    def defer_offline(t_complete):
+    def defer_offline(t_complete, c):
         # a completion falling inside the device's offline window fires
         # when the device comes back online (the sample is not dropped)
-        offline = (t_complete >= off_start) & (t_complete < off_end)
+        off_end = c["off_start"] + c["off_for"]
+        offline = (t_complete >= c["off_start"]) & (t_complete < off_end)
         return jnp.where(offline, off_end, t_complete)
-
-    state = {
-        "t": jnp.zeros((), jnp.float32),
-        "n_events": jnp.zeros((), jnp.int32),
-        "dev_next": defer_offline(dev_latency),
-        "cursor": jnp.zeros((n,), jnp.int32),
-        "thresh": jnp.broadcast_to(init_thresh, (n,)).astype(jnp.float32),
-        "mult": jnp.ones((n,), jnp.float32),
-        "win_met": jnp.zeros((n,), jnp.int32),
-        "win_total": jnp.zeros((n,), jnp.int32),
-        "tot_met": jnp.zeros((n,), jnp.int32),
-        "tot": jnp.zeros((n,), jnp.int32),
-        "correct": jnp.zeros((n,), jnp.int32),
-        "fwd": jnp.zeros((n,), jnp.int32),
-        "q_start": jnp.zeros((cap,), jnp.float32),
-        "q_dev": jnp.zeros((cap,), jnp.int32),
-        "q_samp": jnp.zeros((cap,), jnp.int32),
-        "head": jnp.zeros((), jnp.int32),
-        "tail": jnp.zeros((), jnp.int32),
-        "busy_until": jnp.zeros((), jnp.float32),
-        "last_batch": jnp.zeros((), jnp.int32),
-        "server_idx": params["server_init"].astype(jnp.int32),
-        "last_done_t": jnp.zeros((), jnp.float32),
-    }
 
     def next_event_t(st):
         # next device completion; padded / finished devices sit at +inf
@@ -592,9 +618,54 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
                           st["busy_until"], jnp.inf)
         return jnp.minimum(t_dev, t_srv)
 
-    def event_step(st, t):
+    def drained(st, c):
+        valid = jnp.arange(n) < c["n_real"]
+        return ((st["tail"] == st["head"])
+                & jnp.all(jnp.where(valid, st["cursor"] >= s, True)))
+
+    def lane_init(c):
+        init_thresh = jnp.where(c["scheduler"] == SCHED_CODES["static"],
+                                c["static_threshold"], c["init_threshold"])
+        st = {
+            "t": jnp.zeros((), jnp.float32),
+            "n_events": jnp.zeros((), jnp.int32),
+            "dev_next": defer_offline(c["dev_latency"], c),
+            "cursor": jnp.zeros((n,), jnp.int32),
+            "thresh": jnp.broadcast_to(init_thresh, (n,)).astype(jnp.float32),
+            "mult": jnp.ones((n,), jnp.float32),
+            "win_met": jnp.zeros((n,), jnp.int32),
+            "win_total": jnp.zeros((n,), jnp.int32),
+            "tot_met": jnp.zeros((n,), jnp.int32),
+            "tot": jnp.zeros((n,), jnp.int32),
+            "correct": jnp.zeros((n,), jnp.int32),
+            "fwd": jnp.zeros((n,), jnp.int32),
+            "q_start": jnp.zeros((cap,), jnp.float32),
+            "q_dev": jnp.zeros((cap,), jnp.int32),
+            "q_samp": jnp.zeros((cap,), jnp.int32),
+            "head": jnp.zeros((), jnp.int32),
+            "tail": jnp.zeros((), jnp.int32),
+            "busy_until": jnp.zeros((), jnp.float32),
+            "last_batch": jnp.zeros((), jnp.int32),
+            "server_idx": c["server_init"].astype(jnp.int32),
+            "last_done_t": jnp.zeros((), jnp.float32),
+            "w": jnp.zeros((), jnp.int32),
+            "k": jnp.zeros((), jnp.int32),
+        }
+        st["frontier"] = next_event_t(st)
+        st["active"] = ~drained(st, c) & (static.n_windows > 0)
+        st["traces"] = {key: jnp.full((static.n_windows,), jnp.nan,
+                                      jnp.float32) for key in TRACE_KEYS}
+        return st
+
+    def lane_event(st, c, srv, go):
+        """Advance one lane to its frontier event; no-op bitwise if ~go."""
+        conf, cl, ch = c["conf"], c["cl"], c["ch"]
+        dev_latency, slo = c["dev_latency"], c["slo"]
+        base_lat, scaling = srv["base_lat"], srv["scaling"]
+        t = st["frontier"]
+
         # --- device completions at exactly this instant -------------------
-        done = (st["dev_next"] <= t) & (st["cursor"] < s)
+        done = (st["dev_next"] <= t) & (st["cursor"] < s) & go
         cj = jnp.clip(st["cursor"], 0, s - 1)
         conf_j = conf[jnp.arange(n), cj]
         local = conf_j >= st["thresh"]          # Eq. 3
@@ -621,15 +692,15 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
 
         cursor = st["cursor"] + done
         dev_next = jnp.where(done,
-                             defer_offline(st["dev_next"] + dev_latency),
+                             defer_offline(st["dev_next"] + dev_latency, c),
                              st["dev_next"])
         last_done_t = jnp.where(jnp.any(comp_local), t, st["last_done_t"])
 
         # --- server dynamic batching --------------------------------------
         qlen = tail - st["head"]
-        can_pop = (t >= st["busy_until"]) & (qlen > 0)
+        can_pop = (t >= st["busy_until"]) & (qlen > 0) & go
         sidx = st["server_idx"]
-        braw = jnp.minimum(qlen, max_batch[sidx])
+        braw = jnp.minimum(qlen, srv["max_batch"][sidx])
         b = jnp.max(jnp.where(ladder <= braw, ladder, 1))
         lanes = jnp.arange(MAX_POP)
         take = (lanes < b) & can_pop
@@ -637,7 +708,8 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         starts = q_start[qidx]          # updated arrays: same-event entries
         devs = jnp.where(take, q_dev[qidx], 0)
         samps = q_samp[qidx]
-        lat_b = base_lat[sidx] * (1.0 + scaling[sidx] * (b - 1).astype(jnp.float32))
+        lat_b = base_lat[sidx] * (1.0 + scaling[sidx]
+                                  * (b - 1).astype(jnp.float32))
         # exact launch: t is the batch-finish time when the queue was
         # backed up, or the arrival of the sample that made it non-empty —
         # by construction never before any popped sample was enqueued
@@ -655,37 +727,31 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         last_batch = jnp.where(can_pop, b, st["last_batch"])
         last_done_t = jnp.where(can_pop, finish, last_done_t)
 
-        return dict(
-            t=t, n_events=st["n_events"] + 1,
-            dev_next=dev_next, cursor=cursor, thresh=st["thresh"],
-            mult=st["mult"], win_met=win_met, win_total=win_total,
-            tot_met=tot_met, tot=tot, correct=correct, fwd=st_fwd,
-            q_start=q_start, q_dev=q_dev, q_samp=q_samp, head=head,
-            tail=tail, busy_until=busy_until, last_batch=last_batch,
-            server_idx=sidx, last_done_t=last_done_t)
+        st2 = dict(
+            st, t=jnp.where(go, t, st["t"]), n_events=st["n_events"] + go,
+            dev_next=dev_next, cursor=cursor, win_met=win_met,
+            win_total=win_total, tot_met=tot_met, tot=tot, correct=correct,
+            fwd=st_fwd, q_start=q_start, q_dev=q_dev, q_samp=q_samp,
+            head=head, tail=tail, busy_until=busy_until,
+            last_batch=last_batch, last_done_t=last_done_t,
+            k=st["k"] + go)
+        # the pre-extracted frontier: the only place it ever moves — a
+        # window boundary touches no queue/cursor/server-timing state
+        st2["frontier"] = jnp.where(go, next_event_t(st2), st["frontier"])
+        return st2
 
-    def window_body(carry):
-        st, traces, w = carry
-        t_end = (w + 1).astype(jnp.float32) * window
+    def lane_boundary(st, c, go):
+        """One window boundary: scheduler + switching + trace row.
 
-        # the next-event time rides in the carry: computing it once per
-        # processed event (instead of in both cond and body) halves the
-        # reduction work of the hottest loop in the repo
-        def ev_cond(c):
-            _, k, t_next = c
-            return (t_next <= t_end) & (k < static.max_events_per_window)
-
-        def ev_body(c):
-            st, k, t_next = c
-            st = event_step(st, t_next)
-            return st, k + 1, next_event_t(st)
-
-        st, _, _ = jax.lax.while_loop(
-            ev_cond, ev_body,
-            (st, jnp.zeros((), jnp.int32), next_event_t(st)))
-
-        # --- window boundary: scheduler + switching ----------------------
-        active = (~((t_end >= off_start) & (t_end < off_end))) & valid
+        Returns ``(upd, row)``: the BOUNDARY_FIELDS updates (masked by
+        ``go``) and the float32 trace row — never the full carry, so the
+        enclosing ``lax.cond`` stays cheap on event-only iterations.
+        """
+        valid = jnp.arange(n) < c["n_real"]
+        n_real_f = c["n_real"].astype(jnp.float32)
+        off_end = c["off_start"] + c["off_for"]
+        t_end = (st["w"] + 1).astype(jnp.float32) * window
+        active = (~((t_end >= c["off_start"]) & (t_end < off_end))) & valid
         sr = jnp.where(st["win_total"] > 0,
                        100.0 * st["win_met"] / jnp.maximum(st["win_total"], 1),
                        100.0)
@@ -694,76 +760,181 @@ def _run_core(static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
         def upd_multitascpp(_):
             upd = mtpp.update({"thresh": thresh, "mult": mult}, sr,
                               mtpp.MultiTASCPPConfig(
-                                  a=params["a"],
-                                  sr_target=params["sr_target"],
-                                  mult_growth=params["mult_growth"]),
+                                  a=c["a"],
+                                  sr_target=c["sr_target"],
+                                  mult_growth=c["mult_growth"]),
                               n_active=jnp.sum(active), active=active)
             return upd["thresh"], upd["mult"]
 
         def upd_multitasc(_):
             upd = mt.update({"thresh": thresh}, st["last_batch"],
-                            params["b_opt"],
-                            mt.MultiTASCConfig(step=params["multitasc_step"]),
+                            c["b_opt"],
+                            mt.MultiTASCConfig(step=c["multitasc_step"]),
                             active=active)
             return upd["thresh"], mult
 
         def upd_static(_):
             return thresh, mult
 
-        thresh, mult = jax.lax.switch(
-            params["scheduler"],
+        thresh2, mult2 = jax.lax.switch(
+            c["scheduler"],
             (upd_multitascpp, upd_multitasc, upd_static), None)
         win_met = jnp.where(active, 0, st["win_met"])
         win_total = jnp.where(active, 0, st["win_total"])
 
-        sw = switching.decide(thresh, tier_ids, MAX_TIERS,
-                              params["c_lower"], c_upper, active=active)
+        sw = switching.decide(thresh2, c["tier_ids"], MAX_TIERS,
+                              c["c_lower"], c["c_upper"], active=active)
         server_idx = jnp.clip(
-            st["server_idx"] + jnp.where(params["model_switching"] != 0,
-                                         sw, 0),
+            st["server_idx"] + jnp.where(c["model_switching"] != 0, sw, 0),
             0, static.n_servers - 1)
 
-        st = dict(st, thresh=thresh, mult=mult, win_met=win_met,
-                  win_total=win_total, server_idx=server_idx)
         acc_run = jnp.where(st["tot"] > 0,
                             st["correct"] / jnp.maximum(st["tot"], 1), 1.0)
         row = {
-            "thresh": jnp.nanmean(jnp.where(active, thresh, jnp.nan)),
+            "thresh": jnp.nanmean(jnp.where(active, thresh2, jnp.nan)),
             "sr": jnp.sum(jnp.where(valid, sr, 0.0)) / n_real_f,
             "active": jnp.sum(active) / n_real_f,
             "server_idx": server_idx.astype(jnp.float32),
             "fwd": jnp.sum(jnp.where(valid, st["fwd"], 0)).astype(jnp.float32),
             "acc": jnp.sum(jnp.where(valid, acc_run, 0.0)) / n_real_f,
         }
-        traces = {k: traces[k].at[w].set(row[k]) for k in traces}
-        return st, traces, w + 1
+        w2 = st["w"] + go
+        upd = {
+            "thresh": jnp.where(go, thresh2, thresh),
+            "mult": jnp.where(go, mult2, mult),
+            "win_met": jnp.where(go, win_met, st["win_met"]),
+            "win_total": jnp.where(go, win_total, st["win_total"]),
+            "server_idx": jnp.where(go, server_idx, st["server_idx"]),
+            "w": w2,
+            "k": jnp.where(go, 0, st["k"]),
+            # a lane leaves the loop when its duration is exhausted or
+            # every real sample drained (the early exit)
+            "active": jnp.where(go,
+                                (w2 < static.n_windows) & ~drained(st, c),
+                                st["active"]),
+        }
+        return upd, row
 
-    def window_cond(carry):
-        st, _, w = carry
-        drained = ((st["tail"] == st["head"])
-                   & jnp.all(jnp.where(valid, st["cursor"] >= s, True)))
-        return (w < static.n_windows) & ~drained
+    def lane_metrics(final, c):
+        valid = jnp.arange(n) < c["n_real"]
+        n_real_f = c["n_real"].astype(jnp.float32)
+        tot = jnp.maximum(final["tot"], 1)
+        per_acc = final["correct"] / tot
+        return {
+            "sr": 100.0 * final["tot_met"].sum()
+                  / jnp.maximum(final["tot"].sum(), 1),
+            "per_device_sr": 100.0 * final["tot_met"] / tot,
+            "per_device_acc": per_acc,
+            "accuracy": jnp.sum(jnp.where(valid, per_acc, 0.0)) / n_real_f,
+            "throughput": final["tot"].sum()
+                          / jnp.maximum(final["last_done_t"], 1e-9),
+            "forwarded_frac": final["fwd"].sum()
+                              / jnp.maximum(final["tot"].sum(), 1),
+            "completed": final["tot"].sum(),
+            "queue_left": final["tail"] - final["head"],
+            "n_events": final["n_events"],
+            "traces": final["traces"],
+            "final_thresh": final["thresh"],
+        }
 
-    trace_init = {k: jnp.full((static.n_windows,), jnp.nan, jnp.float32)
-                  for k in TRACE_KEYS}
-    final, traces, _ = jax.lax.while_loop(
-        window_cond, window_body, (state, trace_init, jnp.zeros((), jnp.int32)))
+    return lane_init, lane_event, lane_boundary, lane_metrics
 
-    tot = jnp.maximum(final["tot"], 1)
-    per_acc = final["correct"] / tot
-    return {
-        "sr": 100.0 * final["tot_met"].sum() / jnp.maximum(final["tot"].sum(), 1),
-        "per_device_sr": 100.0 * final["tot_met"] / tot,
-        "per_device_acc": per_acc,
-        "accuracy": jnp.sum(jnp.where(valid, per_acc, 0.0)) / n_real_f,
-        "throughput": final["tot"].sum() / jnp.maximum(final["last_done_t"], 1e-9),
-        "forwarded_frac": final["fwd"].sum() / jnp.maximum(final["tot"].sum(), 1),
-        "completed": final["tot"].sum(),
-        "queue_left": final["tail"] - final["head"],
-        "n_events": final["n_events"],
-        "traces": traces,
-        "final_thresh": final["thresh"],
-    }
+
+def _batched_engine(static, params, srv, conf, cl, ch, dev_latency, slo,
+                    tier_ids, c_upper, off_start, off_for):
+    """The flat (B, ...) lane-aligned loop: returns (st0, body, finalize).
+
+    The carry is one dict of B-leading arrays plus per-lane ``active``,
+    ``frontier`` (next-event time), ``w`` (window) and ``k`` (events this
+    window). Each ``body`` call advances EVERY lane that has an event due
+    inside its current window by exactly that one event (per-field masked
+    writes — a held or finished lane is bitwise frozen), then runs a
+    ``lax.cond``-gated window-boundary step for lanes whose frontier
+    passed their window end. Lanes never wait for each other: the loop
+    trips are max-over-lanes of (events + windows), not
+    sum-over-windows of max-over-lanes as under vmapped while_loops.
+    """
+    lane_init, lane_event, lane_boundary, lane_metrics = _engine_fns(static)
+    bsz = conf.shape[0]
+    consts = dict(params, conf=conf, cl=cl, ch=ch, dev_latency=dev_latency,
+                  slo=slo, tier_ids=tier_ids, c_upper=c_upper,
+                  off_start=off_start, off_for=off_for)
+    init_v = jax.vmap(lane_init)
+    event_v = jax.vmap(lane_event, in_axes=(0, 0, None, 0))
+    boundary_v = jax.vmap(lane_boundary, in_axes=(0, 0, 0))
+    metrics_v = jax.vmap(lane_metrics)
+
+    def event_flags(st):
+        # an event is due iff it lands inside the lane's current window
+        # and the per-window safety cap has room; otherwise the lane's
+        # next step is its window boundary
+        t_end = (st["w"] + 1).astype(jnp.float32) * static.window
+        return (st["active"] & (st["frontier"] <= t_end)
+                & (st["k"] < static.max_events_per_window))
+
+    def body(st):
+        st = event_v(st, consts, srv, event_flags(st))
+        # boundary after the event of the same iteration: a lane whose
+        # frontier just left the window takes its boundary immediately
+        # (same per-lane op sequence as event-then-boundary, fewer trips)
+        go_b = st["active"] & ~event_flags(st)
+
+        def do_boundary(op):
+            st_, go_ = op
+            return boundary_v(st_, consts, go_)
+
+        def skip_boundary(op):
+            st_, _ = op
+            return ({k: st_[k] for k in BOUNDARY_FIELDS},
+                    {k: jnp.zeros((bsz,), jnp.float32) for k in TRACE_KEYS})
+
+        upd, row = jax.lax.cond(jnp.any(go_b), do_boundary, skip_boundary,
+                                (st, go_b))
+        # lanes not at a boundary write their row out of bounds and are
+        # dropped: one gather-free scatter per key, no per-lane select
+        # over the trace buffers (an active lane's w is < n_windows, so
+        # in-bounds exactly for the lanes that really close a window)
+        bidx = jnp.arange(bsz)
+        wj = jnp.where(go_b, st["w"], static.n_windows)
+        traces = {key: st["traces"][key].at[bidx, wj].set(row[key],
+                                                          mode="drop")
+                  for key in TRACE_KEYS}
+        return dict(st, traces=traces, **upd)
+
+    def finalize(st):
+        return metrics_v(st, consts)
+
+    return init_v(consts), body, finalize
+
+
+def _run_core_lanes(static, params, srv, conf, cl, ch, dev_latency, slo,
+                    tier_ids, c_upper, off_start, off_for):
+    st0, body, finalize = _batched_engine(
+        static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
+        c_upper, off_start, off_for)
+    final = jax.lax.while_loop(lambda st: jnp.any(st["active"]), body, st0)
+    return finalize(final)
+
+
+def lane_stepper(specs, streams, dev_latency, slo,
+                 servers: Sequence[ServerProfile], *, tier_ids=None,
+                 c_upper=None, offline_start=None, offline_for=None):
+    """Debug/test hook: the engine's initial carry plus a jitted
+    single-iteration ``step`` — literally the ``body`` the compiled core
+    loops over, so invariant tests (frontier monotonicity, inactive-lane
+    freezing, drain <=> any(active)) observe the real engine, not a
+    mirror. Not a performance path.
+
+    Returns ``(state, step, static)``; ``jnp.any(state["active"])`` is
+    the loop condition the core uses.
+    """
+    static, params, srv, arrays, _, _ = _prepare(
+        specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
+        offline_start, offline_for)
+    st0, body, _ = _batched_engine(
+        static, jax.device_put(params), jax.device_put(srv),
+        *(jax.device_put(a) for a in arrays))
+    return st0, jax.jit(body), static
 
 
 run_jit = run  # the inner core is jitted and cached per static structure

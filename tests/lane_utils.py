@@ -1,0 +1,77 @@
+"""Shared helpers for batched-lane tests (tests/test_lanes.py and the
+heterogeneous-lane differential slice in tests/test_differential.py).
+
+One copy of the widest-lane packing convention and of the NaN-aware
+bitwise lane-vs-serial assertion, so the two suites can never drift
+into testing different ``run_sweep`` batched-input contracts.
+"""
+import numpy as np
+
+SCALARS = ("sr", "accuracy", "throughput", "forwarded_frac", "completed",
+           "queue_left", "n_events")
+
+
+def pack_lanes(lanes):
+    """Pack heterogeneous per-lane inputs into one run_sweep argument set.
+
+    ``lanes``: dicts with keys ``spec`` (JaxSimSpec), ``streams`` (the
+    lane's n-wide dict: confidence/correct_light (n, s), correct_heavy
+    (n, s, P)), ``lat``/``slo``/``tier`` ((n,)), ``c_upper`` ((3,)) and
+    optional ``off_start``/``off_for`` ((n,) or None). Streams and
+    device vectors are packed at the widest lane's device width; the
+    extra rows are zero/neutral (the engine forces them inert).
+
+    Returns ``(specs, streams, lat, slo, kw)`` ready for
+    ``jaxsim.run_sweep(specs, streams, lat, slo, servers, **kw)``.
+    """
+    b = len(lanes)
+    n_max = max(ln["spec"].n_devices for ln in lanes)
+    s = lanes[0]["spec"].samples_per_device
+    n_heavy = lanes[0]["streams"]["correct_heavy"].shape[-1]
+    conf = np.zeros((b, n_max, s), np.float32)
+    cl = np.zeros((b, n_max, s), np.int32)
+    ch = np.zeros((b, n_max, s, n_heavy), np.int32)
+    lat = np.full((b, n_max), 1.0, np.float32)
+    slo = np.full((b, n_max), 1.0, np.float32)
+    tier = np.zeros((b, n_max), np.int32)
+    c_upper = np.zeros((b, 3), np.float32)
+    off_start = np.full((b, n_max), np.inf, np.float32)
+    off_for = np.zeros((b, n_max), np.float32)
+    specs = []
+    for i, ln in enumerate(lanes):
+        n = ln["spec"].n_devices
+        conf[i, :n] = ln["streams"]["confidence"]
+        cl[i, :n] = ln["streams"]["correct_light"]
+        ch[i, :n] = ln["streams"]["correct_heavy"]
+        lat[i, :n], slo[i, :n], tier[i, :n] = ln["lat"], ln["slo"], ln["tier"]
+        c_upper[i] = ln["c_upper"]
+        if ln.get("off_start") is not None:
+            off_start[i, :n] = ln["off_start"]
+            off_for[i, :n] = ln["off_for"]
+        specs.append(ln["spec"])
+    streams = {"confidence": conf, "correct_light": cl, "correct_heavy": ch}
+    kw = dict(tier_ids=tier, c_upper=c_upper, offline_start=off_start,
+              offline_for=off_for)
+    return specs, streams, lat, slo, kw
+
+
+def assert_lane_bitwise(batch_out, i, solo_out, n):
+    """Lane i of a batched result == its own B=1 run, bitwise."""
+    for k in SCALARS:
+        assert float(np.asarray(batch_out[k])[i]) == float(solo_out[k]), k
+    for k in ("per_device_sr", "per_device_acc", "final_thresh"):
+        np.testing.assert_array_equal(
+            np.asarray(batch_out[k])[i, :n], np.asarray(solo_out[k])[:n],
+            err_msg=k)
+    for k, bt in batch_out["traces"].items():
+        bt = np.asarray(bt)[i]
+        so = np.asarray(solo_out["traces"][k])
+        # window counts may differ (the batch pools the slowest lane's
+        # duration; solo derives its own) — executed rows must agree and
+        # the batch's surplus tail stays NaN (the early exit)
+        w = min(len(bt), len(so))
+        np.testing.assert_array_equal(np.isnan(bt[:w]), np.isnan(so[:w]),
+                                      err_msg=k)
+        m = ~np.isnan(bt[:w])
+        np.testing.assert_array_equal(bt[:w][m], so[:w][m], err_msg=k)
+        assert np.all(np.isnan(bt[w:])), (k, "surplus rows must stay NaN")

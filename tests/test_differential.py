@@ -39,6 +39,7 @@ try:
 except ImportError:  # deterministic mini engine from conftest
     from conftest import given, settings, st  # noqa: F401
 
+from lane_utils import assert_lane_bitwise, pack_lanes
 from repro.configs.cascade_tiers import (DeviceProfile, SERVER_PROFILES,
                                          ServerProfile)
 from repro.sim import events, jaxsim
@@ -295,6 +296,89 @@ def test_differential_offline(seed, scheduler):
     # SR rows are not comparable)
     compare(random_config(200 + seed, scheduler, offline=True),
             trajectories=False)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-lane batches through the lane-aligned core: mixed
+# schedulers, device counts and regimes in ONE B>1 call — each lane must
+# match its own B=1 run bitwise (cross-lane isolation) and its reference
+# simulation within TOL
+# ---------------------------------------------------------------------------
+def run_jax_lanes(cfgs):
+    """Pack differential configs into one batched ``run_sweep`` call
+    (shared ``lane_utils.pack_lanes`` convention).
+
+    All lanes share the server tables (they are replicated across the
+    batch, not per-lane), so callers must give every config the same
+    ``servers`` tuple; everything else — scheduler, device count,
+    latencies, SLOs, thresholds, offline windows — differs freely.
+    """
+    bad = {cfg.servers for cfg in cfgs}
+    assert len(bad) == 1, f"lanes must share one servers tuple, got {bad}"
+    lanes = []
+    for cfg in cfgs:
+        _, stacked = _streams_of(cfg)
+        spec = jaxsim.JaxSimSpec(
+            scheduler=cfg.scheduler, n_devices=cfg.n,
+            samples_per_device=cfg.samples, window=WINDOW,
+            init_threshold=cfg.init_threshold,
+            static_threshold=cfg.static_threshold,
+            model_switching=cfg.model_switching)
+        lanes.append(dict(spec=spec, streams=stacked, lat=cfg.latencies,
+                          slo=cfg.slos, tier=cfg.tier_ids,
+                          c_upper=cfg.c_upper, off_start=cfg.offline_start,
+                          off_for=cfg.offline_for))
+    specs, streams, lat, slo, kw = pack_lanes(lanes)
+    return jaxsim.run_sweep(specs, streams, lat, slo, cfgs[0].servers,
+                            **kw)
+
+
+def _hetero_slice(seeds_scheds, *, offline_seeds=(), samples=48):
+    """Differential configs shaped for one batch: shared samples and a
+    shared server pair, everything else heterogeneous."""
+    cfgs = []
+    for seed, sched in seeds_scheds:
+        cfg = random_config(seed, sched, stress=bool(seed % 2),
+                            offline=seed in offline_seeds)
+        cfg.samples = samples
+        cfg.servers = SERVERS
+        cfgs.append(cfg)
+    return cfgs
+
+
+def test_differential_heterogeneous_lane_batch():
+    """The cross-lane isolation regression test: six differential
+    configs (all three schedulers, easy + congested SLO regimes, one
+    offline lane, 2-8 devices) in one B=6 call."""
+    cfgs = _hetero_slice([(11, "multitasc++"), (12, "multitasc"),
+                          (13, "static"), (14, "multitasc++"),
+                          (15, "static"), (16, "multitasc")],
+                         offline_seeds=(14,))
+    solos = []
+    for cfg in cfgs:
+        # B=1 vs float64 reference, existing tolerances (trajectories
+        # are not comparable for offline lanes, as in the offline test)
+        _, out = compare(cfg, trajectories=cfg.offline_start is None)
+        solos.append(out)
+    batch = run_jax_lanes(cfgs)
+    for i, (cfg, solo) in enumerate(zip(cfgs, solos)):
+        assert_lane_bitwise(batch, i, solo, cfg.n)
+
+
+@pytest.mark.slow
+def test_differential_long_sweep_lanes():
+    """Long differential sweep (deselected from tier-1; the dedicated CI
+    job runs ``-m slow``): 30 fresh seeds x 3 schedulers, compared to
+    the reference sim AND cross-checked through heterogeneous 3-lane
+    batches — every lane bitwise equal to its B=1 run."""
+    for base in range(500, 530):
+        trio = _hetero_slice([(base * 3, "multitasc++"),
+                              (base * 3 + 1, "multitasc"),
+                              (base * 3 + 2, "static")])
+        solos = [compare(cfg)[1] for cfg in trio]
+        batch = run_jax_lanes(trio)
+        for i, (cfg, solo) in enumerate(zip(trio, solos)):
+            assert_lane_bitwise(batch, i, solo, cfg.n)
 
 
 # ---------------------------------------------------------------------------

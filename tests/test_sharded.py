@@ -2,7 +2,7 @@
 
 ``run_sweep_sharded`` must be bitwise-equal to ``run_sweep`` (and hence
 to serial ``run``) on a 1-device mesh by construction, and on a multi-
-device mesh because each shard runs the very same vmapped event core
+device mesh because each shard runs the very same lane-aligned event core
 over its slice of lanes. Multi-shard cases run whenever jax sees more
 than one device (CI forces 4 via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and skip

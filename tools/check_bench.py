@@ -15,6 +15,12 @@ Hard failures (exit 1):
     (check ``--mesh-shape`` and ``XLA_FLAGS=--xla_force_host_platform_
     device_count``).
 
+  * a ``fig11_lanes`` wall-per-point ratio (``ratio_b8`` = per-point
+    wall at B=8 over B=1, likewise ``ratio_b64``) exceeds
+    ``LANE_RATIO_LIMIT`` — the lane-aligned engine's batching guarantee
+    (the ~10% B=1-vs-B=8 target plus timer-noise headroom; the old
+    vmapped engine sat at ~2.3x/4x and must never come back).
+
 Wall time is reported but only warned about by default (CI machines are
 too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
 R * baseline into a failure.
@@ -25,6 +31,8 @@ import argparse
 import json
 import sys
 
+LANE_RATIO_LIMIT = 1.25
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
@@ -33,6 +41,12 @@ def main() -> int:
     ap.add_argument("--strict-wall", type=float, default=None,
                     metavar="RATIO",
                     help="fail when wall_s > RATIO * baseline wall_s")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="FIGURE",
+                    help="fail (not warn) when FIGURE is missing from the"
+                         " new run — for gate steps whose whole point is"
+                         " one figure (a declined/skipped probe would"
+                         " otherwise pass vacuously)")
     args = ap.parse_args()
 
     with open(args.new) as f:
@@ -41,9 +55,15 @@ def main() -> int:
         base = json.load(f)
 
     failures, warnings = [], []
+    for fig in args.require:
+        if fig not in new:
+            failures.append(
+                f"{fig}: required figure missing from new run (probe "
+                f"declined to run? its gate would pass vacuously)")
     for fig, b in sorted(base.items()):
         if fig not in new:
-            warnings.append(f"{fig}: missing from new run (skipped?)")
+            if fig not in args.require:
+                warnings.append(f"{fig}: missing from new run (skipped?)")
             continue
         n = new[fig]
         if n["n_compiles"] > b["n_compiles"]:
@@ -65,6 +85,16 @@ def main() -> int:
                 f"{fig}: n_points_sharded {n.get('n_points_sharded')} != "
                 f"baseline {b['n_points_sharded']} (points silently moved "
                 f"on/off the sharded core)")
+        for rk in ("ratio_b8", "ratio_b64"):
+            if rk not in b:
+                continue
+            if n.get(rk) is None:
+                failures.append(f"{fig}: {rk} missing from new run")
+            elif n[rk] > LANE_RATIO_LIMIT:
+                failures.append(
+                    f"{fig}: {rk} {n[rk]:.3f} > {LANE_RATIO_LIMIT} "
+                    f"(lane-aligned batching guarantee broken: "
+                    f"wall-per-point must not grow with B)")
         if b.get("wall_s"):
             ratio = n["wall_s"] / b["wall_s"]
             line = (f"{fig}: wall {n['wall_s']:.3f}s vs baseline "

@@ -115,7 +115,7 @@ def derived_str(d: Dict) -> str:
 SIM_FIGURE_MODULES = (
     "fig4_homogeneous", "fig7_heavy_server", "fig10_convergence",
     "fig11_heterogeneous", "fig15_transformers", "fig17_switching",
-    "fig19_intermittent", "ablation_components")
+    "fig19_intermittent", "fig_churn", "ablation_components")
 
 
 def capture_figure_rows(settings: Dict) -> Dict[str, Dict[str, float]]:

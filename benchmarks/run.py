@@ -9,32 +9,50 @@ host mesh via ``run_sweep_sharded`` — emulate hosts on one machine with
 before jax initializes; CI runs exactly this).
 
 ``--json PATH`` (default ``BENCH_jaxsim.json`` under ``--quick``) records
-``{figure: {wall_s, n_points, n_compiles, n_events, n_shards}}`` per
-executed figure so the perf trajectory of the sweep engine stays
-measurable across PRs (``n_events`` = event-jump loop iterations: the
-quantity wall time is proportional to; ``n_shards`` = mesh lanes the
-sweep axis was sharded over).
+``{figure: {wall_s, n_points, n_compiles, n_events, n_shards,
+n_points_sharded}}`` per executed figure plus a top-level ``_schema``
+version, so the perf trajectory of the sweep engine stays measurable
+across PRs (``n_events`` = event-jump loop iterations: the quantity
+wall time is proportional to; ``n_shards`` = mesh lanes the sweep axis
+was sharded over).
 
 ``tools/check_bench.py`` compares a fresh ``--json`` against the
-committed baseline (CI runs it on every push).
+committed baseline (CI runs it on every push) and rejects runs whose
+``_schema`` doesn't match its own ``BENCH_SCHEMA`` — bump BOTH (here
+and there) when a field changes meaning, and re-capture the baseline.
 """
 import argparse
 import json
 import sys
 import time
 
+# version of the per-figure json row layout; tools/check_bench.py
+# asserts it before comparing (keep the two constants in lockstep —
+# tests/test_system.py pins them equal)
+BENCH_SCHEMA = 2
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--quick", action="store_true")
+    ap = argparse.ArgumentParser(
+        description="paper-figure benchmark harness; prints "
+                    "name,us_per_call,derived CSV rows")
+    ap.add_argument("--only", default=None, metavar="FIGURE",
+                    help="run one figure (exact key, e.g. fig11 or"
+                         " fig_churn) or a substring match")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke settings: 1 seed, 200 samples/device,"
+                         " 3 fleet sizes; implies --json"
+                         " BENCH_jaxsim.json unless --json given")
     ap.add_argument("--mesh-shape", default=None, metavar="N[,M]",
-                    help="shard the sweep axis over a mesh of this shape"
-                         " (e.g. 4); needs >= that many jax devices")
+                    help="shard every figure's sweep axis over a host"
+                         " mesh of this shape (e.g. 4 or 2,2); needs >="
+                         " that many jax devices — emulate with XLA_FLAGS"
+                         "=--xla_force_host_platform_device_count=N")
     ap.add_argument("--json", nargs="?", const="BENCH_jaxsim.json",
                     default=None, metavar="PATH",
-                    help="write per-figure {wall_s, n_points, n_compiles}"
-                         " (default on for --quick)")
+                    help="write per-figure {wall_s, n_points, n_compiles,"
+                         " n_events, n_shards, n_points_sharded} plus the"
+                         " _schema version (default on for --quick)")
     args = ap.parse_args()
 
     from benchmarks import common
@@ -57,7 +75,7 @@ def main() -> None:
                             fig11_heterogeneous, fig11_lanes,
                             fig11_scaleout, fig15_transformers,
                             fig17_switching, fig19_intermittent,
-                            kernels_bench)
+                            fig_churn, kernels_bench)
     from repro.sim import jaxsim
     modules = {
         "fig4": fig4_homogeneous,
@@ -69,6 +87,7 @@ def main() -> None:
         "fig15": fig15_transformers,
         "fig17": fig17_switching,
         "fig19": fig19_intermittent,
+        "fig_churn": fig_churn,
         "ablation": ablation_components,
         "kernels": kernels_bench,
     }
@@ -108,6 +127,7 @@ def main() -> None:
             print(row.csv())
             sys.stdout.flush()
     if args.json:
+        bench["_schema"] = BENCH_SCHEMA
         with open(args.json, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -1,7 +1,8 @@
 """Config registry: ``get_config(name)`` / ``list_archs()``.
 
 Assigned architectures (public pool) + cascade-tier configs used by the
-MultiTASC++ serving experiments.
+MultiTASC++ serving experiments. Dynamic-environment scenario specs
+(device churn + arrival drift) live in ``repro.configs.scenarios``.
 """
 from __future__ import annotations
 

@@ -10,7 +10,7 @@ simulator (repro.sim.jaxsim) and for the smaller paper experiments.
 
 Event taxonomy
 --------------
-Four event kinds drive the simulation, processed from a priority heap
+Six event kinds drive the simulation, processed from a priority heap
 keyed ``(time, kind priority, sequence)`` so simultaneous events resolve
 deterministically and in the same order as the vectorized event-jump
 core:
@@ -18,18 +18,30 @@ core:
 =========  ========  ====================================================
 kind       priority  meaning
 =========  ========  ====================================================
-EV_DEV     0         a device finishes local inference on its next sample
+EV_JOIN    0         a device joins the fleet (churn): its first sample
+                     is scheduled; it becomes reportable at boundaries
+EV_LEAVE   1         a device departs the fleet (churn): remaining
+                     stream samples are dropped, in-flight server
+                     requests still complete
+EV_DEV     2         a device finishes local inference on its next sample
                      (classify locally or forward to the server queue)
-EV_ONLINE  1         a device returns from a sample-indexed offline gap
-EV_SRV     2         a server batch finishes (results return, next batch
+EV_ONLINE  3         a device returns from a sample-indexed offline gap
+EV_SRV     4         a server batch finishes (results return, next batch
                      may start back-to-back)
-EV_WINDOW  3         SLO window boundary: per-device SR reports,
+EV_WINDOW  5         SLO window boundary: per-device SR reports,
                      scheduler update, model-switching decision
 =========  ========  ====================================================
 
-At one instant this yields: completions first, then batch finish +
-launch (seeing the just-forwarded samples), then the window update —
-exactly the in-instant processing order of ``jaxsim``'s event loop.
+At one instant this yields: membership changes first (a join at exactly
+``t`` is visible to every same-instant event; a leave at exactly ``t``
+beats a completion at ``t`` — the completion is dropped, matching the
+vectorized core's ``dev_next >= leave_t`` departure test), then
+completions, then batch finish + launch (seeing the just-forwarded
+samples), then the window update — exactly the in-instant processing
+order of ``jaxsim``'s event loop. A boundary at ``t_end`` therefore
+reports a device active iff ``join_t <= t_end < leave_t`` (and it is
+not offline), the closed form ``jaxsim`` evaluates from its traced
+churn schedule.
 
 Offline gaps come in two flavours: the original *sample-indexed* gap
 (``offline_at``/``offline_for``: the device drops out when its cursor
@@ -39,6 +51,12 @@ reaches a sample index) and the *time-based* window used by ``jaxsim``
 is reported inactive at window boundaries inside the gap). The
 time-based flavour matches the vectorized core sample-for-sample, which
 is what the differential harness (tests/test_differential.py) relies on.
+
+Non-stationary arrivals: ``DeviceRuntime.arrive`` (cumulative seconds
+per sample, same convention as ``jaxsim``'s ``streams["arrive"]``)
+gates when each sample can start — sample ``j`` begins at
+``max(previous finish, arrive[j])`` and completes one device latency
+later. ``None`` keeps the saturated legacy model.
 """
 from __future__ import annotations
 
@@ -56,10 +74,12 @@ from repro.core.multitasc import MultiTASC
 from repro.sim.synthetic import SampleStream
 
 # event kinds, in tie-break priority order (see module docstring)
-EV_DEV = 0      # device completion
-EV_ONLINE = 1   # device back online (sample-indexed offline mode)
-EV_SRV = 2      # server batch finish
-EV_WINDOW = 3   # SLO window boundary
+EV_JOIN = 0     # device joins the fleet (churn)
+EV_LEAVE = 1    # device departs the fleet (churn)
+EV_DEV = 2      # device completion
+EV_ONLINE = 3   # device back online (sample-indexed offline mode)
+EV_SRV = 4      # server batch finish
+EV_WINDOW = 5   # SLO window boundary
 
 
 @dataclasses.dataclass
@@ -80,12 +100,21 @@ class DeviceRuntime:
     offline_for: float = 0.0              # seconds (sample-indexed mode)
     offline_start_t: Optional[float] = None  # time-based offline window (s)
     offline_for_t: float = 0.0               # its duration (s)
+    join_t: float = 0.0                   # fleet membership [join_t, ...
+    leave_t: float = float("inf")         # ..., leave_t) — churn schedule
+    joined: bool = True                   # flipped by EV_JOIN / EV_LEAVE
+    departed: bool = False
+    arrive: Optional[np.ndarray] = None   # (n,) cumulative arrival times
 
     def offline_during(self, t: float) -> bool:
         """Is ``t`` inside the time-based offline window?"""
         return (self.offline_start_t is not None
                 and self.offline_start_t <= t
                 < self.offline_start_t + self.offline_for_t)
+
+    def arrival(self, j: int) -> float:
+        """Arrival time of sample ``j`` (0.0 in the saturated model)."""
+        return 0.0 if self.arrive is None else float(self.arrive[j])
 
 
 @dataclasses.dataclass
@@ -103,6 +132,10 @@ class SimResult:
     # iterations, which exclude window boundaries and may merge a
     # completion cluster with a launch); don't cross-compare the two
     n_events: int = 0
+    # samples that actually completed (locally or on the server): equals
+    # the stream total without churn; under churn, a departing device's
+    # unprocessed samples are dropped and never counted here
+    completed: int = 0
 
 
 def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
@@ -130,7 +163,16 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
         seq += 1
 
     for i, dev in enumerate(devices):
-        push(dev.profile.latency, EV_DEV, i)
+        if dev.join_t > 0.0:
+            dev.joined = False
+            push(dev.join_t, EV_JOIN, i)
+        else:
+            # sample 0 starts when the device is present AND the sample
+            # has arrived (saturated model: both are 0)
+            push(max(dev.join_t, dev.arrival(0)) + dev.profile.latency,
+                 EV_DEV, i)
+        if np.isfinite(dev.leave_t):
+            push(dev.leave_t, EV_LEAVE, i)
     push(window, EV_WINDOW, None)
 
     queue: deque = deque()    # (start_time, device_id, sample_idx)
@@ -170,6 +212,13 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
         dev = devices[i]
         if dev.cursor >= len(dev.stream):
             return
+        if dev.departed:
+            # lazy departure, as in the vectorized core: the would-be
+            # completion past leave_t drops the rest of the stream (a
+            # same-instant EV_LEAVE pops first, so a completion at
+            # exactly leave_t is dropped in both simulators)
+            dev.cursor = len(dev.stream)
+            return
         if dev.offline_at is not None and dev.cursor >= dev.offline_at:
             dev.offline_at = None
             dev.active = False
@@ -192,12 +241,30 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
             # same-instant completion has enqueued (simultaneous arrivals
             # must form one batch, as in the vectorized core)
         if dev.cursor < len(dev.stream):
-            push(t + dev.profile.latency, EV_DEV, i)
+            push(max(t, dev.arrival(dev.cursor)) + dev.profile.latency,
+                 EV_DEV, i)
 
     def on_online(t, i):
-        devices[i].active = True
-        if devices[i].cursor < len(devices[i].stream):
-            push(t + devices[i].profile.latency, EV_DEV, i)
+        dev = devices[i]
+        dev.active = True
+        if dev.cursor < len(dev.stream):
+            push(max(t, dev.arrival(dev.cursor)) + dev.profile.latency,
+                 EV_DEV, i)
+
+    def on_join(t, i):
+        dev = devices[i]
+        dev.joined = True
+        if dev.cursor < len(dev.stream):
+            # scheduled even when already departed (join_t >= leave_t):
+            # the orphan EV_DEV drops the stream on pop, exactly like
+            # the vectorized core's lazy departure
+            push(max(t, dev.arrival(dev.cursor)) + dev.profile.latency,
+                 EV_DEV, i)
+
+    def on_leave(t, i):
+        # only the flag flips here; the pending in-flight completion
+        # converts itself when it pops (lazy, as in the vectorized core)
+        devices[i].departed = True
 
     def on_server(t, payload):
         nonlocal server_busy
@@ -211,8 +278,11 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
 
     def on_window(t):
         nonlocal server_idx
-        active = np.array([d.active and not d.offline_during(t)
-                           for d in devices])
+        # membership flags are flipped by EV_JOIN/EV_LEAVE, which beat
+        # EV_WINDOW at equal timestamps — so this equals the vectorized
+        # core's closed form join_t <= t_end < leave_t
+        active = np.array([d.joined and not d.departed and d.active
+                           and not d.offline_during(t) for d in devices])
         if hasattr(scheduler, "set_active"):
             scheduler.set_active(active)   # n_active drives Alg. 1 growth
         for i, dev in enumerate(devices):
@@ -257,7 +327,11 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
         last_t = max(last_t, t)
         n_events += 1
 
-        if kind == EV_DEV:
+        if kind == EV_JOIN:
+            on_join(t, payload)
+        elif kind == EV_LEAVE:
+            on_leave(t, payload)
+        elif kind == EV_DEV:
             on_device(t, payload)
             # launch only after the whole same-instant completion cluster
             # has been processed: a fleet of identical-latency devices
@@ -288,6 +362,7 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
         timeline=timeline,
         server_model_time=server_time,
         n_events=n_events,
+        completed=int(total),
     )
 
 

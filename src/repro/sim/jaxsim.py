@@ -195,6 +195,48 @@ tests/test_differential.py):
     sample the same way for time-based offline);
   * scheduler updates stop at the early exit — final thresholds are the
     values when the last sample drained, not after an idle tail.
+
+Dynamic-environment scenarios: churn + non-stationary arrivals
+--------------------------------------------------------------
+Two traced per-device scenario inputs make the *environment* — not just
+the fleet profile — a sweep axis (see docs/ARCHITECTURE.md for the full
+design and repro.configs.scenarios for the spec type):
+
+* **Device churn** (``join_t``/``leave_t``, seconds, per device): a
+  device joins the fleet at ``join_t`` (its first completion lands at
+  ``max(join_t, arrival of sample 0) + latency``; before that it is as
+  inert as a padded device) and departs at ``leave_t``. A departure is
+  *lazy*: the first would-be completion at ``t >= leave_t`` converts
+  into a departure event that sets the device's ``dev_next`` to +inf
+  and marks its stream exhausted — remaining samples are dropped, never
+  completed (``completed`` counts only processed samples). Samples the
+  device forwarded *before* leaving still finish on the server and are
+  credited normally. No new event *time* enters ``next_event_t``: a
+  join is an initial offset, a leave rides the completion that would
+  have crossed it — so the frontier invariant ("only events move the
+  frontier") is untouched. At a window boundary a device is reported
+  active iff ``join_t <= t_end < leave_t`` (closed-form from the traced
+  schedule, matching the reference sim's EV_JOIN < EV_LEAVE < EV_WINDOW
+  priority at equal timestamps).
+* **Non-stationary arrivals** (``streams["arrive"]``, cumulative
+  seconds, shape ``(N, S)`` or ``(B, N, S)``): sample ``k`` of a device
+  becomes available at ``arrive[k]``; the device starts it at
+  ``max(previous finish, arrive[k])`` and completes ``latency`` later
+  (deferred by offline windows as usual). All-zero arrivals (the
+  default) reproduce the legacy saturated-stream model bitwise.
+  Piecewise-rate and MMPP-style bursty tensors are generated
+  vectorized by ``synthetic.piecewise_arrivals`` /
+  ``synthetic.mmpp_arrivals``. The simulated duration (and thus the
+  static window count) covers the pooled worst-case lead
+  ``max(join_t + arrive[-1])`` so late joiners and lulls drain before
+  the window budget runs out.
+
+Both inputs are traced: churn schedules and arrival tensors vary freely
+across the lanes of one batch without recompiling, and every lane-
+masking invariant (masked writes, inert padding, per-lane reductions)
+applies to them unchanged. Only the *presence* of an arrival tensor is
+static (``JaxSimStatic.has_arrive``), so the legacy saturated path
+compiles without the (B, N, S) buffer or the per-event arrival gather.
 """
 from __future__ import annotations
 
@@ -261,6 +303,10 @@ class JaxSimStatic:
     n_windows: int
     max_events_per_window: int   # safety cap on the inner event loop
     cap: int
+    # whether the sweep carries an arrival tensor: static so the legacy
+    # saturated path compiles without the (B, N, S) buffer, its
+    # transfer/donation, or the per-event arrival gather
+    has_arrive: bool = False
 
 
 @dataclasses.dataclass
@@ -294,8 +340,13 @@ def stats_snapshot() -> Dict[str, int]:
 
 
 def _static_of(spec: JaxSimSpec, n_servers: int, max_lat: float,
-               n_stream: int | None = None) -> JaxSimStatic:
-    duration = max_lat * spec.samples_per_device + spec.extra_time
+               n_stream: int | None = None, lead: float = 0.0,
+               has_arrive: bool = False) -> JaxSimStatic:
+    # ``lead`` = pooled worst-case head start before a device's last
+    # sample can begin (max over real devices of join_t + arrive[-1]):
+    # zero for the legacy saturated model, so the derived window count —
+    # and with it the static structure — is unchanged there
+    duration = max_lat * spec.samples_per_device + lead + spec.extra_time
     duration = -(-duration // DURATION_QUANTUM) * DURATION_QUANTUM
     # bucket from the packed stream width: lanes with different device
     # counts (n_real is traced) share one static structure and one core
@@ -308,7 +359,8 @@ def _static_of(spec: JaxSimSpec, n_servers: int, max_lat: float,
         n_servers=n_servers, window=float(spec.window),
         n_windows=int(-(-duration // spec.window)),
         max_events_per_window=2 * n_pad * spec.samples_per_device + MAX_POP,
-        cap=n_pad * spec.samples_per_device + MAX_POP)
+        cap=n_pad * spec.samples_per_device + MAX_POP,
+        has_arrive=has_arrive)
 
 
 def _params_of(spec: JaxSimSpec, servers: Sequence[ServerProfile],
@@ -327,20 +379,49 @@ def _params_of(spec: JaxSimSpec, servers: Sequence[ServerProfile],
 
 def run(spec: JaxSimSpec, streams, dev_latency, slo, servers:
         Sequence[ServerProfile], *, tier_ids=None, c_upper=None,
-        offline_start=None, offline_for=None):
+        offline_start=None, offline_for=None, join_t=None, leave_t=None):
     """Single sweep point: ``run_sweep`` with B=1, batch axis stripped.
 
-    streams: dict of (N,S) numpy arrays (+ correct_heavy (N,S,P)).
-    Returns dict of jnp metrics + window traces (already device-averaged).
+    Args:
+      spec: the point's ``JaxSimSpec`` (scheduler, fleet size, gains).
+      streams: dict of per-device sample tensors —
+        ``confidence`` (N, S) float in [0, 1], ``correct_light`` (N, S)
+        {0, 1}, ``correct_heavy`` (N, S, P) {0, 1} with one column per
+        server profile (a (N, S) array is treated as P=1), and optional
+        ``arrive`` (N, S): cumulative arrival time of each sample in
+        seconds (omitted/zeros = the saturated legacy model). Generate
+        with ``synthetic.device_streams`` (+ ``piecewise_arrivals`` /
+        ``mmpp_arrivals`` for the arrival tensor); N may exceed
+        ``spec.n_devices`` (extra rows are forced inert).
+      dev_latency: per-device inference latency, seconds — scalar or
+        (N,).
+      slo: per-device latency SLO, seconds — scalar or (N,).
+      servers: the server ``ServerProfile`` ladder (model switching
+        moves ``server_idx`` along it).
+      tier_ids: per-device tier index in [0, MAX_TIERS), scalar or (N,).
+      c_upper: per-tier switching threshold, (n_tiers,).
+      offline_start / offline_for: time-based offline window per device,
+        seconds (start inf = never offline).
+      join_t / leave_t: churn schedule per device, seconds — the device
+        is a fleet member on [join_t, leave_t); defaults 0 / +inf (see
+        the module docstring for departure semantics).
+
+    Returns a dict of scalar jnp metrics (``sr`` [0-100], ``accuracy``
+    [0-1], ``throughput`` samples/s, ``forwarded_frac``, ``completed``,
+    ``queue_left``, ``n_events``), per-device vectors
+    (``per_device_sr``/``per_device_acc``/``final_thresh``, (N,)) and
+    window traces (``traces[key]`` (n_windows,), NaN past the early
+    exit).
     """
     out = run_sweep([spec], streams, dev_latency, slo, servers,
                     tier_ids=tier_ids, c_upper=c_upper,
-                    offline_start=offline_start, offline_for=offline_for)
+                    offline_start=offline_start, offline_for=offline_for,
+                    join_t=join_t, leave_t=leave_t)
     return jax.tree.map(lambda x: x[0], out)
 
 
 def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-             offline_start, offline_for):
+             offline_start, offline_for, join_t=None, leave_t=None):
     """Validate and stack a sweep's host-side inputs.
 
     Returns ``(static, params, srv, arrays, b, n)`` where ``params`` is a
@@ -358,8 +439,12 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     conf = np.asarray(streams["confidence"], np.float32)
     cl = np.asarray(streams["correct_light"], np.int32)
     ch = np.asarray(streams["correct_heavy"], np.int32)
+    arrive = streams.get("arrive")
+    arrive = None if arrive is None else np.asarray(arrive, np.float32)
     if conf.ndim == 2:
         conf, cl, ch = conf[None], cl[None], ch[None]
+    if arrive is not None and arrive.ndim == 2:
+        arrive = arrive[None]
     if ch.ndim == 3:
         ch = ch[..., None]
     b = max(len(specs), conf.shape[0])
@@ -371,6 +456,8 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
         conf = np.broadcast_to(conf, (b,) + conf.shape[1:])
         cl = np.broadcast_to(cl, (b,) + cl.shape[1:])
         ch = np.broadcast_to(ch, (b,) + ch.shape[1:])
+    if arrive is not None and arrive.shape[0] == 1 and b > 1:
+        arrive = np.broadcast_to(arrive, (b,) + arrive.shape[1:])
 
     # device counts may differ per lane (n_real is traced): streams come
     # packed at the widest lane's width and narrower lanes' extra rows
@@ -387,6 +474,9 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
         raise ValueError(
             f"all specs must share samples_per_device={s};"
             f" got {sorted(set(bad))}")
+    if arrive is not None and arrive.shape != (b, n, s):
+        raise ValueError(f"streams['arrive'] shape {arrive.shape} != "
+                         f"{(b, n, s)} (cumulative seconds per sample)")
     n_real = np.asarray([sp.n_devices for sp in specs], np.int32)
 
     def per_point(x, fill, dtype, width, pad_fill=None):
@@ -407,8 +497,17 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     # points just early-exit sooner (latencies are fully traced)
     real_mask = np.arange(n)[None, :] < n_real[:, None]
     max_lat = float(dev_lat_real[real_mask].max())
+    # pooled scenario lead: a late joiner / arrival lull delays a
+    # device's last sample by at most join_t + arrive[-1] past the
+    # saturated schedule — the window budget must cover it (leaves only
+    # shorten runs, so leave_t never enters the duration)
+    join_real = per_point(join_t, 0.0, np.float32, n)
+    lead = join_real + (arrive[..., -1] if arrive is not None else 0.0)
+    lead_max = float(lead[real_mask].max()) if np.any(real_mask) else 0.0
 
-    statics = {_static_of(sp, len(servers), max_lat, n) for sp in specs}
+    statics = {_static_of(sp, len(servers), max_lat, n, lead_max,
+                          arrive is not None)
+               for sp in specs}
     if len(statics) != 1:
         raise ValueError(
             "run_sweep points must share static structure; got "
@@ -438,6 +537,19 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     c_upper_b = per_point(c_upper, 0.8, np.float32, MAX_TIERS)
     off_start_b = per_point(offline_start, np.inf, np.float32, n_pad)
     off_for_b = per_point(offline_for, 0.0, np.float32, n_pad)
+    # churn schedules: padded / out-of-lane devices never join (their
+    # inf latency already keeps them inert; join 0 / leave inf is the
+    # no-churn identity for real devices)
+    join_b = per_point(join_real, 0.0, np.float32, n_pad)
+    leave_b = per_point(leave_t, np.inf, np.float32, n_pad,
+                        pad_fill=np.inf)
+    if arrive is None:
+        # static has_arrive=False: the engine never reads this — an
+        # empty sample axis keeps the legacy path free of a dead
+        # (B, N, S) buffer, its transfer, and its donation
+        arrive_b = np.zeros((b, n_pad, 0), np.float32)
+    else:
+        arrive_b = pad_streams(np.ascontiguousarray(arrive))
 
     plist = [_params_of(sp, servers, float(slo_b[i, :sp.n_devices].min()))
              for i, sp in enumerate(specs)]
@@ -455,7 +567,9 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     }
 
     arrays = (pad_streams(conf), pad_streams(cl), pad_streams(ch),
-              dev_lat, slo_b, tier_b, c_upper_b, off_start_b, off_for_b)
+              arrive_b,
+              dev_lat, slo_b, tier_b, c_upper_b, off_start_b, off_for_b,
+              join_b, leave_b)
     return static, params, srv, arrays, b, n
 
 
@@ -472,17 +586,33 @@ def _finalize(out, b, n):
 def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
               dev_latency, slo, servers: Sequence[ServerProfile], *,
               tier_ids=None, c_upper=None, offline_start=None,
-              offline_for=None):
+              offline_for=None, join_t=None, leave_t=None):
     """Batched sweep: B points through one lane-aligned, jit-compiled core.
 
-    See the module docstring for the full contract. All points must share
-    static structure; traced values (scheduler kind, thresholds, gains,
-    targets, latency profiles, server profile) vary freely without
-    recompiling.
+    Args: as ``run``, with a leading batch axis B —
+
+      * ``specs``: one spec (broadcast) or a sequence of B specs sharing
+        static structure (``samples_per_device``, ``window``,
+        ``extra_time``-derived window count; a ``ValueError`` names the
+        mismatch otherwise). Schedulers, thresholds, gains and
+        ``n_devices`` (traced) may differ per point.
+      * ``streams``: ``confidence``/``correct_light`` (B, N, S) — or
+        (N, S), broadcast — ``correct_heavy`` (B, N, S, P), optional
+        ``arrive`` (B, N, S) cumulative seconds. N is the widest lane's
+        device count.
+      * device vectors (``dev_latency``/``slo``/``tier_ids``/
+        ``offline_*``/``join_t``/``leave_t``): (N,) shared or (B, N)
+        per-point; ``c_upper``: (n_tiers,) or (B, n_tiers).
+
+    Returns the ``run`` metric dict with a leading B axis on every leaf
+    (``sr``: (B,), ``traces[key]``: (B, n_windows), ...). All traced
+    values — including churn schedules and arrival tensors — vary freely
+    across points without recompiling; only static structure forces a
+    new executable. Stream buffers are donated to the computation.
     """
     static, params, srv, arrays, b, n = _prepare(
         specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-        offline_start, offline_for)
+        offline_start, offline_for, join_t, leave_t)
     return _run_local(static, params, srv, arrays, b, n)
 
 
@@ -509,11 +639,12 @@ def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
                       streams, dev_latency, slo,
                       servers: Sequence[ServerProfile], *, mesh=None,
                       tier_ids=None, c_upper=None, offline_start=None,
-                      offline_for=None):
+                      offline_for=None, join_t=None, leave_t=None):
     """``run_sweep`` with the B axis sharded over a ``jax.sharding`` mesh.
 
-    Same contract and return value as ``run_sweep``; see the module
-    docstring ("Sharding / placement design") for how points are placed.
+    Same argument contract and return value as ``run_sweep`` (build the
+    mesh with ``launch.mesh.make_sweep_mesh``); see the module docstring
+    ("Sharding / placement design") for how points are placed.
     ``mesh=None``, a single-lane mesh, or a single-point sweep falls
     back to the local path (bitwise identical): padding B=1 to the lane
     count would make every lane compute the same duplicated point, so a
@@ -527,10 +658,11 @@ def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
         return run_sweep(specs, streams, dev_latency, slo, servers,
                          tier_ids=tier_ids, c_upper=c_upper,
                          offline_start=offline_start,
-                         offline_for=offline_for)
+                         offline_for=offline_for, join_t=join_t,
+                         leave_t=leave_t)
     static, params, srv, arrays, b, n = _prepare(
         specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-        offline_start, offline_for)
+        offline_start, offline_for, join_t, leave_t)
     if b == 1:
         return _run_local(static, params, srv, arrays, b, n)
     b_pad = -(-b // lanes) * lanes
@@ -556,7 +688,7 @@ def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
 def _make_core(static: JaxSimStatic):
     stats.cores_built += 1
     return jax.jit(functools.partial(_run_core_lanes, static),
-                   donate_argnums=(2, 3, 4))
+                   donate_argnums=(2, 3, 4, 5))
 
 
 @functools.lru_cache(maxsize=256)
@@ -570,9 +702,9 @@ def _make_core_sharded(static: JaxSimStatic, mesh):
     # check_vma=False: the body is collective-free (each shard loops over
     # its own lanes), and the replication checker has no rule for while
     sharded = shard_map(functools.partial(_run_core_lanes, static),
-                        mesh=mesh, in_specs=(bspec, rep) + (bspec,) * 9,
+                        mesh=mesh, in_specs=(bspec, rep) + (bspec,) * 12,
                         out_specs=bspec, check_vma=False)
-    return jax.jit(sharded, donate_argnums=(2, 3, 4))
+    return jax.jit(sharded, donate_argnums=(2, 3, 4, 5))
 
 
 # carry fields a window boundary touches: the boundary lax.cond passes
@@ -626,10 +758,15 @@ def _engine_fns(static: JaxSimStatic):
     def lane_init(c):
         init_thresh = jnp.where(c["scheduler"] == SCHED_CODES["static"],
                                 c["static_threshold"], c["init_threshold"])
+        # sample 0 starts when the device has joined AND the sample has
+        # arrived (join 0 + zero arrivals = the legacy saturated start;
+        # without an arrival tensor the arrive term compiles out)
+        first = (jnp.maximum(c["join_t"], c["arrive"][:, 0])
+                 if static.has_arrive else c["join_t"])
         st = {
             "t": jnp.zeros((), jnp.float32),
             "n_events": jnp.zeros((), jnp.int32),
-            "dev_next": defer_offline(c["dev_latency"], c),
+            "dev_next": defer_offline(first + c["dev_latency"], c),
             "cursor": jnp.zeros((n,), jnp.int32),
             "thresh": jnp.broadcast_to(init_thresh, (n,)).astype(jnp.float32),
             "mult": jnp.ones((n,), jnp.float32),
@@ -660,12 +797,19 @@ def _engine_fns(static: JaxSimStatic):
     def lane_event(st, c, srv, go):
         """Advance one lane to its frontier event; no-op bitwise if ~go."""
         conf, cl, ch = c["conf"], c["cl"], c["ch"]
+        arrive_c = c["arrive"]
         dev_latency, slo = c["dev_latency"], c["slo"]
         base_lat, scaling = srv["base_lat"], srv["scaling"]
         t = st["frontier"]
 
         # --- device completions at exactly this instant -------------------
-        done = (st["dev_next"] <= t) & (st["cursor"] < s) & go
+        due = (st["dev_next"] <= t) & (st["cursor"] < s) & go
+        # a would-be completion at or past leave_t is the lazy departure
+        # event: the sample (and the rest of the stream) is dropped, the
+        # device goes inert — samples already forwarded to the server are
+        # unaffected and finish normally
+        departs = due & (st["dev_next"] >= c["leave_t"])
+        done = due & ~departs
         cj = jnp.clip(st["cursor"], 0, s - 1)
         conf_j = conf[jnp.arange(n), cj]
         local = conf_j >= st["thresh"]          # Eq. 3
@@ -690,10 +834,22 @@ def _engine_fns(static: JaxSimStatic):
             jnp.where(fwd_mask, cj, st["q_samp"][posm]))
         tail = st["tail"] + jnp.sum(fwd_mask)
 
-        cursor = st["cursor"] + done
+        # a departed device's stream counts as exhausted (drained() and
+        # next_event_t both read cursor >= s), so the drain early-exit
+        # fires without its dropped samples ever completing
+        cursor = jnp.where(departs, s, st["cursor"] + done)
+        # next sample starts when the device is free AND it has arrived
+        # (no arrival tensor -> back-to-back, the gather compiles out)
+        if static.has_arrive:
+            arrive_next = arrive_c[jnp.arange(n),
+                                   jnp.clip(cursor, 0, s - 1)]
+            start_next = jnp.maximum(st["dev_next"], arrive_next)
+        else:
+            start_next = st["dev_next"]
         dev_next = jnp.where(done,
-                             defer_offline(st["dev_next"] + dev_latency, c),
+                             defer_offline(start_next + dev_latency, c),
                              st["dev_next"])
+        dev_next = jnp.where(departs, jnp.inf, dev_next)
         last_done_t = jnp.where(jnp.any(comp_local), t, st["last_done_t"])
 
         # --- server dynamic batching --------------------------------------
@@ -751,7 +907,13 @@ def _engine_fns(static: JaxSimStatic):
         n_real_f = c["n_real"].astype(jnp.float32)
         off_end = c["off_start"] + c["off_for"]
         t_end = (st["w"] + 1).astype(jnp.float32) * window
-        active = (~((t_end >= c["off_start"]) & (t_end < off_end))) & valid
+        # fleet membership is closed-form from the traced churn schedule
+        # (matching the reference sim's EV_JOIN < EV_LEAVE < EV_WINDOW
+        # order at equal timestamps: a device joining exactly at t_end
+        # counts present, one leaving exactly at t_end counts departed)
+        member = (t_end >= c["join_t"]) & (t_end < c["leave_t"])
+        active = (~((t_end >= c["off_start"]) & (t_end < off_end))) \
+            & member & valid
         sr = jnp.where(st["win_total"] > 0,
                        100.0 * st["win_met"] / jnp.maximum(st["win_total"], 1),
                        100.0)
@@ -840,8 +1002,9 @@ def _engine_fns(static: JaxSimStatic):
     return lane_init, lane_event, lane_boundary, lane_metrics
 
 
-def _batched_engine(static, params, srv, conf, cl, ch, dev_latency, slo,
-                    tier_ids, c_upper, off_start, off_for):
+def _batched_engine(static, params, srv, conf, cl, ch, arrive, dev_latency,
+                    slo, tier_ids, c_upper, off_start, off_for, join_t,
+                    leave_t):
     """The flat (B, ...) lane-aligned loop: returns (st0, body, finalize).
 
     The carry is one dict of B-leading arrays plus per-lane ``active``,
@@ -856,9 +1019,10 @@ def _batched_engine(static, params, srv, conf, cl, ch, dev_latency, slo,
     """
     lane_init, lane_event, lane_boundary, lane_metrics = _engine_fns(static)
     bsz = conf.shape[0]
-    consts = dict(params, conf=conf, cl=cl, ch=ch, dev_latency=dev_latency,
-                  slo=slo, tier_ids=tier_ids, c_upper=c_upper,
-                  off_start=off_start, off_for=off_for)
+    consts = dict(params, conf=conf, cl=cl, ch=ch, arrive=arrive,
+                  dev_latency=dev_latency, slo=slo, tier_ids=tier_ids,
+                  c_upper=c_upper, off_start=off_start, off_for=off_for,
+                  join_t=join_t, leave_t=leave_t)
     init_v = jax.vmap(lane_init)
     event_v = jax.vmap(lane_event, in_axes=(0, 0, None, 0))
     boundary_v = jax.vmap(lane_boundary, in_axes=(0, 0, 0))
@@ -907,30 +1071,39 @@ def _batched_engine(static, params, srv, conf, cl, ch, dev_latency, slo,
     return init_v(consts), body, finalize
 
 
-def _run_core_lanes(static, params, srv, conf, cl, ch, dev_latency, slo,
-                    tier_ids, c_upper, off_start, off_for):
+def _run_core_lanes(static, params, srv, conf, cl, ch, arrive, dev_latency,
+                    slo, tier_ids, c_upper, off_start, off_for, join_t,
+                    leave_t):
     st0, body, finalize = _batched_engine(
-        static, params, srv, conf, cl, ch, dev_latency, slo, tier_ids,
-        c_upper, off_start, off_for)
+        static, params, srv, conf, cl, ch, arrive, dev_latency, slo,
+        tier_ids, c_upper, off_start, off_for, join_t, leave_t)
     final = jax.lax.while_loop(lambda st: jnp.any(st["active"]), body, st0)
     return finalize(final)
 
 
 def lane_stepper(specs, streams, dev_latency, slo,
                  servers: Sequence[ServerProfile], *, tier_ids=None,
-                 c_upper=None, offline_start=None, offline_for=None):
+                 c_upper=None, offline_start=None, offline_for=None,
+                 join_t=None, leave_t=None):
     """Debug/test hook: the engine's initial carry plus a jitted
     single-iteration ``step`` — literally the ``body`` the compiled core
     loops over, so invariant tests (frontier monotonicity, inactive-lane
     freezing, drain <=> any(active)) observe the real engine, not a
     mirror. Not a performance path.
 
-    Returns ``(state, step, static)``; ``jnp.any(state["active"])`` is
-    the loop condition the core uses.
+    Args: exactly ``run_sweep``'s (batched, including the scenario
+    inputs ``join_t``/``leave_t`` and ``streams["arrive"]``).
+
+    Returns ``(state, step, static)``: ``state`` is the flat (B, ...)
+    carry dict (per-lane ``active``/``frontier``/``w``/``k`` plus the
+    per-device state vectors), ``step`` maps carry -> carry for one
+    loop iteration, and ``static`` is the ``JaxSimStatic`` recompile
+    key; ``jnp.any(state["active"])`` is the loop condition the core
+    uses.
     """
     static, params, srv, arrays, _, _ = _prepare(
         specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-        offline_start, offline_for)
+        offline_start, offline_for, join_t, leave_t)
     st0, body, _ = _batched_engine(
         static, jax.device_put(params), jax.device_put(srv),
         *(jax.device_put(a) for a in arrays))

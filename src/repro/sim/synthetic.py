@@ -38,6 +38,11 @@ child and takes per-device streams as rows of its block draws, so
 streams of distinct sweep seeds are independent at any fleet size.
 Golden fixtures capturing concrete metric values (tests/golden) must be
 regenerated when this version bumps.
+
+Non-stationary arrival tensors (``piecewise_arrivals`` /
+``mmpp_arrivals``, for the dynamic-environment scenarios) draw from an
+independent SeedSequence child of the same sweep seed, so they compose
+with any existing stream fixture without changing its values.
 """
 from __future__ import annotations
 
@@ -112,6 +117,18 @@ def _seed_rng(seed: int) -> np.random.Generator:
     never replay each other's device streams (the v1 ``seed*1000 + i``
     derivation collided once n_devices >= 1000)."""
     return np.random.default_rng(np.random.SeedSequence(int(seed)).spawn(1)[0])
+
+
+def _child_rng(seed: int, child: int) -> np.random.Generator:
+    """Generator for an independent per-seed sub-stream.
+
+    Child 0 is the sample-stream generator (``_seed_rng``); arrival
+    processes use child 1 and churn schedules child 2 — spawned children
+    of one ``SeedSequence`` are mutually independent, so adding a
+    scenario to a sweep seed never disturbs its sample streams (fixture
+    v2 values are unchanged)."""
+    return np.random.default_rng(
+        np.random.SeedSequence(int(seed)).spawn(child + 1)[child])
 
 
 def _sigmoid_into(x: np.ndarray) -> np.ndarray:
@@ -221,10 +238,24 @@ def _reference_stream_blocks(seeds, n_devices: int, samples_per_device: int,
 
 def device_streams(n_devices: int, samples_per_device: int, light_accs,
                    heavy_acc, seed: int):
-    """Stacked streams for the vectorized simulator.
+    """Stacked sample streams for the vectorized simulator, one seed.
 
-    light_accs: scalar or (n_devices,) per-device light-model accuracy.
-    Returns dict of (n_devices, samples_per_device[, n_profiles]) arrays.
+    Args:
+      n_devices / samples_per_device: stream tensor shape (N, S).
+      light_accs: scalar or (N,) per-device light-model marginal
+        accuracy in [0, 1] (the alpha bisection hits it exactly on the
+        calibration draw).
+      heavy_acc: scalar or (P,) per-server-profile heavy-model accuracy
+        — one ``correct_heavy`` column per profile, drawn with common
+        random numbers so model switching is consistent.
+      seed: sweep seed; derivation is SeedSequence-keyed (fixture
+        ``STREAM_FIXTURE_VERSION = 2`` — bumping it invalidates golden
+        fixtures, see the module docstring).
+
+    Returns a dict: ``confidence`` (N, S) float32 in [0, 1],
+    ``correct_light`` (N, S) int8 {0, 1}, ``correct_heavy`` (N, S, P)
+    int8. Merge an ``arrive`` tensor from ``piecewise_arrivals`` /
+    ``mmpp_arrivals`` into the same dict for non-stationary arrivals.
     """
     blocks = _stream_blocks((seed,), n_devices, samples_per_device,
                             light_accs, heavy_acc)
@@ -235,10 +266,87 @@ def batched_device_streams(seeds, n_devices: int, samples_per_device: int,
                            light_accs, heavy_acc):
     """Stacked streams for a whole sweep in one vectorized call.
 
+    Args as ``device_streams`` with ``seeds`` a sequence of sweep seeds.
     Returns dict of ``(len(seeds), n_devices, samples_per_device[, P])``
     tensors whose per-seed slices are bitwise identical to
-    ``device_streams(..., seed)`` — the batch axis feeds
-    ``jaxsim.run_sweep`` / ``run_sweep_sharded`` directly.
+    ``device_streams(..., seed)`` (pinned by tests against the loop
+    spec) — the batch axis feeds ``jaxsim.run_sweep`` /
+    ``run_sweep_sharded`` directly.
     """
     return _stream_blocks(tuple(seeds), n_devices, samples_per_device,
                           light_accs, heavy_acc)
+
+
+# ---------------------------------------------------------------------------
+# non-stationary arrival processes (dynamic-environment scenarios)
+#
+# Both generators return CUMULATIVE arrival times, float32, shape
+# (len(seeds), n_devices, samples_per_device): sample k of a device
+# becomes available at arrive[..., k] seconds — feed the tensor to the
+# simulators as streams["arrive"] (all-zeros = the saturated legacy
+# model). Rates are in samples/second; pass rates around a device's
+# service rate 1/latency to move between backlogged (arrivals faster
+# than service: bitwise-saturated behaviour) and idle-gapped regimes.
+# Draws come from SeedSequence child 1 of each sweep seed (_child_rng),
+# independent of the sample-stream draws — attaching arrivals to an
+# existing sweep seed never changes its confidence/correctness streams.
+# ---------------------------------------------------------------------------
+def piecewise_arrivals(seeds, n_devices: int, samples_per_device: int,
+                       rates, seg_fracs=None):
+    """Piecewise-constant-rate Poisson arrivals (rate drift).
+
+    The sample axis is split into ``len(rates)`` segments (by
+    ``seg_fracs`` fractions, equal by default) and gap ``k`` is drawn
+    ``Exp(1 / rate_seg(k))`` — a workload whose rate steps through
+    ``rates`` as the stream progresses. ``rates``: per-segment arrival
+    rates, samples/s — scalars (shared) or (n_devices,) vectors.
+
+    Returns cumulative arrival times (len(seeds), N, S) float32.
+    """
+    n, m = n_devices, samples_per_device
+    rates = [np.broadcast_to(np.asarray(r, np.float64), (n,))
+             for r in rates]
+    k = len(rates)
+    if seg_fracs is None:
+        seg_fracs = (1.0 / k,) * k
+    if len(seg_fracs) != k:
+        raise ValueError(f"{len(seg_fracs)} seg_fracs for {k} rates")
+    if abs(sum(seg_fracs) - 1.0) > 1e-6:
+        raise ValueError(
+            f"seg_fracs must sum to 1 (got {sum(seg_fracs)}): every "
+            f"sample must belong to a rate segment")
+    edges = np.minimum(np.round(np.cumsum(seg_fracs) * m), m).astype(int)
+    edges[-1] = m                    # rounding must not orphan the tail
+    seg_of = np.searchsorted(edges, np.arange(m), side="right")  # (M,)
+    rate = np.stack(rates, axis=0)[seg_of]                   # (M, N)
+    mean_gap = (1.0 / rate).T                                # (N, M)
+    out = np.empty((len(seeds), n, m))
+    for i, seed in enumerate(seeds):
+        rng = _child_rng(seed, 1)
+        out[i] = rng.standard_exponential((n, m)) * mean_gap
+    return np.cumsum(out, axis=-1).astype(np.float32)
+
+
+def mmpp_arrivals(seeds, n_devices: int, samples_per_device: int,
+                  rate_hi, rate_lo, switch_prob: float = 0.05):
+    """Bursty MMPP-style arrivals: a symmetric two-state modulating
+    chain per device (state flips between draws with ``switch_prob``),
+    gaps drawn ``Exp(1 / rate_state)`` — bursts at ``rate_hi``
+    alternating with lulls at ``rate_lo``. Rates are samples/s, scalar
+    or (n_devices,). The symmetric chain vectorizes exactly: the state
+    sequence is the parity of the cumulative flip count.
+
+    Returns cumulative arrival times (len(seeds), N, S) float32.
+    """
+    n, m = n_devices, samples_per_device
+    hi = np.broadcast_to(np.asarray(rate_hi, np.float64), (n,))
+    lo = np.broadcast_to(np.asarray(rate_lo, np.float64), (n,))
+    out = np.empty((len(seeds), n, m))
+    for i, seed in enumerate(seeds):
+        rng = _child_rng(seed, 1)
+        start_hi = rng.random((n, 1)) < 0.5
+        flips = rng.random((n, m)) < switch_prob     # before each draw
+        in_hi = start_hi ^ (np.cumsum(flips, axis=-1) % 2).astype(bool)
+        mean_gap = np.where(in_hi, 1.0 / hi[:, None], 1.0 / lo[:, None])
+        out[i] = rng.standard_exponential((n, m)) * mean_gap
+    return np.cumsum(out, axis=-1).astype(np.float32)

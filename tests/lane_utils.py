@@ -16,10 +16,13 @@ def pack_lanes(lanes):
 
     ``lanes``: dicts with keys ``spec`` (JaxSimSpec), ``streams`` (the
     lane's n-wide dict: confidence/correct_light (n, s), correct_heavy
-    (n, s, P)), ``lat``/``slo``/``tier`` ((n,)), ``c_upper`` ((3,)) and
-    optional ``off_start``/``off_for`` ((n,) or None). Streams and
-    device vectors are packed at the widest lane's device width; the
-    extra rows are zero/neutral (the engine forces them inert).
+    (n, s, P), optional arrive (n, s)), ``lat``/``slo``/``tier``
+    ((n,)), ``c_upper`` ((3,)) and optional ``off_start``/``off_for``/
+    ``join_t``/``leave_t`` ((n,) or None). Streams and device vectors
+    are packed at the widest lane's device width; the extra rows are
+    zero/neutral (the engine forces them inert). The packed streams
+    carry an ``arrive`` tensor only if some lane has one (other lanes
+    get the all-zero saturated model).
 
     Returns ``(specs, streams, lat, slo, kw)`` ready for
     ``jaxsim.run_sweep(specs, streams, lat, slo, servers, **kw)``.
@@ -37,21 +40,34 @@ def pack_lanes(lanes):
     c_upper = np.zeros((b, 3), np.float32)
     off_start = np.full((b, n_max), np.inf, np.float32)
     off_for = np.zeros((b, n_max), np.float32)
+    join_t = np.zeros((b, n_max), np.float32)
+    leave_t = np.full((b, n_max), np.inf, np.float32)
+    arrive = np.zeros((b, n_max, s), np.float32)
+    any_arrive = any(ln["streams"].get("arrive") is not None
+                     for ln in lanes)
     specs = []
     for i, ln in enumerate(lanes):
         n = ln["spec"].n_devices
         conf[i, :n] = ln["streams"]["confidence"]
         cl[i, :n] = ln["streams"]["correct_light"]
         ch[i, :n] = ln["streams"]["correct_heavy"]
+        if ln["streams"].get("arrive") is not None:
+            arrive[i, :n] = ln["streams"]["arrive"]
         lat[i, :n], slo[i, :n], tier[i, :n] = ln["lat"], ln["slo"], ln["tier"]
         c_upper[i] = ln["c_upper"]
         if ln.get("off_start") is not None:
             off_start[i, :n] = ln["off_start"]
             off_for[i, :n] = ln["off_for"]
+        if ln.get("join_t") is not None:
+            join_t[i, :n] = ln["join_t"]
+        if ln.get("leave_t") is not None:
+            leave_t[i, :n] = ln["leave_t"]
         specs.append(ln["spec"])
     streams = {"confidence": conf, "correct_light": cl, "correct_heavy": ch}
+    if any_arrive:
+        streams["arrive"] = arrive
     kw = dict(tier_ids=tier, c_upper=c_upper, offline_start=off_start,
-              offline_for=off_for)
+              offline_for=off_for, join_t=join_t, leave_t=leave_t)
     return specs, streams, lat, slo, kw
 
 

@@ -83,13 +83,21 @@ class DiffConfig:
     static_threshold: float
     offline_start: np.ndarray | None = None   # (n,) or None
     offline_for: np.ndarray | None = None
+    join_t: np.ndarray | None = None          # (n,) churn schedule or None
+    leave_t: np.ndarray | None = None
+    arrive: np.ndarray | None = None          # (n, samples) cumulative s
 
 
 def random_config(seed: int, scheduler: str, *, model_switching=False,
-                  offline=False, stress=False) -> DiffConfig:
+                  offline=False, stress=False, churn=False,
+                  drift=False) -> DiffConfig:
     """stress=True slows the server until queueing delays break SLOs, so
     the adaptive schedulers actually move their thresholds; stress=False
-    is the paper-profile easy regime (everything meets its SLO)."""
+    is the paper-profile easy regime (everything meets its SLO).
+    churn=True attaches a join/leave schedule (~35% of devices each);
+    drift=True attaches bursty non-stationary arrivals to ~half the
+    devices. Scenario draws come after the base draws, so a seed's base
+    config is identical with and without a scenario."""
     rng = np.random.default_rng(seed)
     n = int(rng.integers(2, 9))
     samples = int(rng.choice(SAMPLE_CHOICES))
@@ -114,14 +122,33 @@ def random_config(seed: int, scheduler: str, *, model_switching=False,
                              rng.uniform(0.2, 0.6, n) * total_t,
                              np.inf).astype(np.float32)
         off_for = rng.uniform(2.0, 6.0, n).astype(np.float32)
+    static_threshold = float(np.float32(rng.uniform(0.3, 0.8)))
+    join_t = leave_t = arrive = None
+    if churn:
+        total_t = float(latencies.max()) * samples
+        # raw uniform join/leave instants: a device completion landing
+        # exactly on one has measure zero (same argument as latencies)
+        join_t = np.where(rng.random(n) < 0.35,
+                          rng.uniform(0.1, 0.4, n) * total_t,
+                          0.0).astype(np.float32)
+        leave_t = np.where(rng.random(n) < 0.35,
+                           rng.uniform(0.5, 0.9, n) * total_t,
+                           np.inf).astype(np.float32)
+    if drift:
+        # bursty gaps around the service rate on ~half the devices: the
+        # others stay saturated (gap 0), mixing both regimes in one run
+        gaps = rng.exponential(latencies[:, None] * 0.8, (n, samples))
+        gaps *= (rng.random(n) < 0.5)[:, None]
+        arrive = np.cumsum(gaps, axis=1).astype(np.float32)
     return DiffConfig(
         seed=seed, scheduler=scheduler, n=n, samples=samples,
         latencies=latencies, slos=slos, tier_ids=tier_ids, c_upper=c_upper,
         servers=servers, model_switching=model_switching,
         init_threshold=0.5,
         # float32-representable so float64/float32 comparisons agree
-        static_threshold=float(np.float32(rng.uniform(0.3, 0.8))),
-        offline_start=off_start, offline_for=off_for)
+        static_threshold=static_threshold,
+        offline_start=off_start, offline_for=off_for,
+        join_t=join_t, leave_t=leave_t, arrive=arrive)
 
 
 def _streams_of(cfg: DiffConfig):
@@ -135,6 +162,8 @@ def _streams_of(cfg: DiffConfig):
         "correct_light": np.stack([s.correct_light for s in per_dev]),
         "correct_heavy": np.stack([s.correct_heavy for s in per_dev]),
     }
+    if cfg.arrive is not None:
+        stacked["arrive"] = cfg.arrive
     return per_dev, stacked
 
 
@@ -153,6 +182,12 @@ def run_reference(cfg: DiffConfig, per_dev=None):
                 and np.isfinite(cfg.offline_start[i]):
             dev.offline_start_t = float(cfg.offline_start[i])
             dev.offline_for_t = float(cfg.offline_for[i])
+        if cfg.join_t is not None:
+            dev.join_t = float(cfg.join_t[i])
+        if cfg.leave_t is not None:
+            dev.leave_t = float(cfg.leave_t[i])
+        if cfg.arrive is not None:
+            dev.arrive = cfg.arrive[i].astype(np.float64)
         devs.append(dev)
     sched = events.make_scheduler(
         cfg.scheduler, cfg.n, server_profile=cfg.servers[0],
@@ -173,7 +208,8 @@ def run_jax(cfg: DiffConfig, stacked=None, mesh=None):
         static_threshold=cfg.static_threshold,
         model_switching=cfg.model_switching)
     kw = dict(tier_ids=cfg.tier_ids, c_upper=cfg.c_upper,
-              offline_start=cfg.offline_start, offline_for=cfg.offline_for)
+              offline_start=cfg.offline_start, offline_for=cfg.offline_for,
+              join_t=cfg.join_t, leave_t=cfg.leave_t)
     if mesh is not None:   # route through the sharded sweep engine
         import jax
         from repro.launch.mesh import n_lanes
@@ -199,8 +235,17 @@ def compare(cfg: DiffConfig, *, trajectories=True, mesh=None):
     tol = TOL[cfg.scheduler]
     total = cfg.n * cfg.samples
 
-    # conservation is exact, always
-    assert int(out["completed"]) == total, cfg
+    # conservation is exact, always: without churn every sample
+    # completes exactly once; under churn the set of *processed*
+    # samples (device-side completion before leave_t) is threshold-
+    # independent, so both simulators must count the same completions
+    # — only float32-vs-float64 rounding exactly at leave_t could flip
+    # one, and raw uniform leave instants make that measure-zero
+    if cfg.leave_t is not None:
+        assert int(out["completed"]) == ref.completed, cfg
+        assert int(out["completed"]) <= total
+    else:
+        assert int(out["completed"]) == total, cfg
     assert int(out["queue_left"]) == 0, cfg
 
     dev = {
@@ -299,6 +344,73 @@ def test_differential_offline(seed, scheduler):
 
 
 # ---------------------------------------------------------------------------
+# dynamic-environment scenarios: device churn (EV_JOIN/EV_LEAVE vs the
+# traced join_t/leave_t schedules) and non-stationary arrivals. Observed
+# deviations over seeds 400-407 x 3 schedulers, churn + drift + both,
+# easy and congested regimes: completed counts identical in every
+# config (conservation is checked exactly in compare()); totals within
+# the existing TOL with margin (static sr == 0 exactly, adaptive
+# sr <= 0.9, acc <= 0.003) — churn does not need looser tolerances,
+# only trajectory comparison is off (win-SR rows of absent devices are
+# stale in different ways, as for offline).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler", ["multitasc++", "multitasc", "static"])
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_churn(seed, scheduler):
+    compare(random_config(400 + seed, scheduler, churn=True,
+                          stress=bool(seed % 2)), trajectories=False)
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "multitasc", "static"])
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_drift(seed, scheduler):
+    # arrivals only: no samples are dropped, trajectories stay
+    # comparable within the existing TOL
+    compare(random_config(420 + seed, scheduler, drift=True,
+                          stress=bool(seed % 2)))
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "static"])
+@pytest.mark.parametrize("seed", range(3))
+def test_differential_churn_drift(seed, scheduler):
+    compare(random_config(440 + seed, scheduler, churn=True, drift=True,
+                          stress=bool(seed % 2)), trajectories=False)
+
+
+@pytest.mark.parametrize("scheduler", ["static", "multitasc++"])
+def test_churn_knife_edge_completion_at_leave(scheduler):
+    """A completion landing *exactly* on leave_t is dropped by both
+    simulators (jaxsim: ``dev_next >= leave_t``; reference: EV_LEAVE
+    beats EV_DEV at equal timestamps). Latency 0.125 and leave at
+    4 * 0.125 are exact in float32 and float64, so the tie really
+    happens in both."""
+    cfg = random_config(460, scheduler)
+    cfg.latencies = np.full(cfg.n, 0.125, np.float32)
+    cfg.slos = np.full(cfg.n, 0.30, np.float32)
+    leave = np.full(cfg.n, np.inf, np.float32)
+    leave[0] = 0.5                      # device 0: samples 0-2 complete,
+    cfg.leave_t = leave                 # sample 3 (t=0.5) is dropped
+    ref, out = compare(cfg, trajectories=False)
+    expect = (cfg.n - 1) * cfg.samples + 3
+    assert ref.completed == expect
+    assert int(out["completed"]) == expect
+
+
+@pytest.mark.parametrize("scheduler", ["multitasc++", "static"])
+def test_differential_churn_sharded_path(scheduler):
+    """Churn + drift configs through ``run_sweep_sharded``: the scenario
+    tensors must survive the mesh dispatch (padding, NamedSharding
+    placement, shard_map) unchanged."""
+    import jax
+    from repro.launch.mesh import make_sweep_mesh
+    mesh = make_sweep_mesh((jax.device_count(),))
+    for seed in (401, 442):
+        compare(random_config(seed, scheduler, churn=True,
+                              drift=seed > 440, stress=bool(seed % 2)),
+                mesh=mesh, trajectories=False)
+
+
+# ---------------------------------------------------------------------------
 # heterogeneous-lane batches through the lane-aligned core: mixed
 # schedulers, device counts and regimes in ONE B>1 call — each lane must
 # match its own B=1 run bitwise (cross-lane isolation) and its reference
@@ -327,19 +439,26 @@ def run_jax_lanes(cfgs):
         lanes.append(dict(spec=spec, streams=stacked, lat=cfg.latencies,
                           slo=cfg.slos, tier=cfg.tier_ids,
                           c_upper=cfg.c_upper, off_start=cfg.offline_start,
-                          off_for=cfg.offline_for))
+                          off_for=cfg.offline_for, join_t=cfg.join_t,
+                          leave_t=cfg.leave_t))
     specs, streams, lat, slo, kw = pack_lanes(lanes)
     return jaxsim.run_sweep(specs, streams, lat, slo, cfgs[0].servers,
                             **kw)
 
 
-def _hetero_slice(seeds_scheds, *, offline_seeds=(), samples=48):
+def _hetero_slice(seeds_scheds, *, offline_seeds=(), churn_seeds=(),
+                  drift_seeds=(), samples=48):
     """Differential configs shaped for one batch: shared samples and a
     shared server pair, everything else heterogeneous."""
     cfgs = []
     for seed, sched in seeds_scheds:
         cfg = random_config(seed, sched, stress=bool(seed % 2),
-                            offline=seed in offline_seeds)
+                            offline=seed in offline_seeds,
+                            churn=seed in churn_seeds,
+                            drift=seed in drift_seeds)
+        if cfg.arrive is not None:   # drawn at the rng-chosen length
+            assert cfg.arrive.shape[1] >= samples
+            cfg.arrive = cfg.arrive[:, :samples]
         cfg.samples = samples
         cfg.servers = SERVERS
         cfgs.append(cfg)
@@ -359,6 +478,24 @@ def test_differential_heterogeneous_lane_batch():
         # B=1 vs float64 reference, existing tolerances (trajectories
         # are not comparable for offline lanes, as in the offline test)
         _, out = compare(cfg, trajectories=cfg.offline_start is None)
+        solos.append(out)
+    batch = run_jax_lanes(cfgs)
+    for i, (cfg, solo) in enumerate(zip(cfgs, solos)):
+        assert_lane_bitwise(batch, i, solo, cfg.n)
+
+
+def test_differential_scenario_lane_batch():
+    """Scenario lanes through the batched core: a churn lane, a drift
+    lane, a churn+drift lane and a plain control in one B=4 call — each
+    verified against its float64 reference AND bitwise against its own
+    B=1 run (churn schedules and arrival tensors are per-lane traced
+    state, so a masking slip would leak them across lanes)."""
+    cfgs = _hetero_slice([(21, "multitasc++"), (22, "static"),
+                          (23, "multitasc"), (24, "static")],
+                         churn_seeds=(21, 23), drift_seeds=(22, 23))
+    solos = []
+    for cfg in cfgs:
+        _, out = compare(cfg, trajectories=cfg.leave_t is None)
         solos.append(out)
     batch = run_jax_lanes(cfgs)
     for i, (cfg, solo) in enumerate(zip(cfgs, solos)):

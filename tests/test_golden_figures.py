@@ -105,4 +105,4 @@ def test_golden_covers_all_figures(current_rows):
     prefixes = {n.split("/")[0] for n in current_rows}
     assert {"fig4_homog", "fig7_effb3", "fig10_convergence",
             "fig11_hetero", "fig15_vit", "fig17_switch",
-            "fig19_intermittent", "ablation"} <= prefixes
+            "fig19_intermittent", "fig_churn", "ablation"} <= prefixes

@@ -50,6 +50,8 @@ class LaneCase:
     lat_scale: float           # per-lane latency magnitude -> duration
     model_switching: bool = False
     offline: bool = False
+    churn: bool = False        # rng join/leave schedule for ~40% of devices
+    drift: bool = False        # bursty MMPP arrivals (non-stationary)
     static_threshold: float = 0.55
     init_threshold: float = 0.5
 
@@ -85,12 +87,28 @@ def _lane_inputs(case: LaneCase, samples=SAMPLES):
     else:
         off_start = np.full(n, np.inf, np.float32)
         off_for = np.zeros(n, np.float32)
+    horizon = float(lat.max()) * samples
+    if case.churn:
+        join_t = np.where(rng.random(n) < 0.4,
+                          rng.uniform(0.1, 0.4, n) * horizon,
+                          0.0).astype(np.float32)
+        leave_t = np.where(rng.random(n) < 0.4,
+                           rng.uniform(0.5, 0.9, n) * horizon,
+                           np.inf).astype(np.float32)
+    else:
+        join_t = np.zeros(n, np.float32)
+        leave_t = np.full(n, np.inf, np.float32)
+    if case.drift:
+        rate = 1.0 / lat.astype(np.float64)
+        streams = dict(streams, arrive=synthetic.mmpp_arrivals(
+            (3000 + case.seed,), n, samples, 1.6 * rate, 0.5 * rate)[0])
     spec = jaxsim.JaxSimSpec(
         scheduler=case.scheduler, n_devices=n, samples_per_device=samples,
         static_threshold=case.static_threshold,
         init_threshold=case.init_threshold,
         model_switching=case.model_switching)
-    return spec, streams, lat, slo, tier, c_upper, off_start, off_for
+    return (spec, streams, lat, slo, tier, c_upper, off_start, off_for,
+            join_t, leave_t)
 
 
 def pack(cases, samples=SAMPLES, junk_seed=None):
@@ -102,9 +120,11 @@ def pack(cases, samples=SAMPLES, junk_seed=None):
     """
     lanes = []
     for case in cases:
-        spec, streams, la, sl, ti, cu, os_, of_ = _lane_inputs(case, samples)
+        (spec, streams, la, sl, ti, cu, os_, of_,
+         jo, le) = _lane_inputs(case, samples)
         lanes.append(dict(spec=spec, streams=streams, lat=la, slo=sl,
-                          tier=ti, c_upper=cu, off_start=os_, off_for=of_))
+                          tier=ti, c_upper=cu, off_start=os_, off_for=of_,
+                          join_t=jo, leave_t=le))
     specs, streams, lat, slo, kw = pack_lanes(lanes)
     if junk_seed is not None:
         n_max = max(c.n for c in cases)
@@ -119,19 +139,26 @@ def pack(cases, samples=SAMPLES, junk_seed=None):
                                                             (m, samples))
             streams["correct_heavy"][i, n:] = jrng.integers(
                 0, 2, (m, samples, len(SERVERS)))
+            if "arrive" in streams:
+                streams["arrive"][i, n:] = jrng.uniform(0.0, 9.0,
+                                                        (m, samples))
             lat[i, n:] = jrng.uniform(0.01, 0.5, m)
             slo[i, n:] = jrng.uniform(0.01, 0.5, m)
             kw["tier_ids"][i, n:] = jrng.integers(0, 3, m)
             kw["offline_start"][i, n:] = jrng.uniform(0.0, 5.0, m)
             kw["offline_for"][i, n:] = jrng.uniform(0.0, 5.0, m)
+            kw["join_t"][i, n:] = jrng.uniform(0.0, 5.0, m)
+            kw["leave_t"][i, n:] = jrng.uniform(0.0, 5.0, m)
     return specs, streams, lat, slo, kw
 
 
 
 def _solo(case: LaneCase):
-    spec, streams, lat, slo, tier, cu, os_, of_ = _lane_inputs(case)
+    (spec, streams, lat, slo, tier, cu, os_, of_,
+     jo, le) = _lane_inputs(case)
     return jaxsim.run(spec, streams, lat, slo, SERVERS, tier_ids=tier,
-                      c_upper=cu, offline_start=os_, offline_for=of_)
+                      c_upper=cu, offline_start=os_, offline_for=of_,
+                      join_t=jo, leave_t=le)
 
 
 def test_heterogeneous_mix_each_lane_matches_serial():
@@ -167,6 +194,80 @@ def test_lane_results_independent_of_companions():
                              **kw_s)
     for si, case in enumerate(sub):
         assert_lane_bitwise(out_s, si, _solo(case), case.n)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-environment scenario lanes: churn schedules (join_t/leave_t)
+# and non-stationary arrival tensors are per-lane traced state — exactly
+# the kind of input a masking slip would leak across lanes. One batch
+# mixes churn-only, drift-only, churn+drift, churn+offline and a plain
+# control lane.
+# ---------------------------------------------------------------------------
+CHURN_MIX = (
+    LaneCase(10, "multitasc++", n=6, lat_scale=0.08, churn=True),
+    LaneCase(11, "static", n=3, lat_scale=0.3, churn=True, drift=True,
+             static_threshold=0.7),
+    LaneCase(12, "multitasc", n=8, lat_scale=0.06, drift=True),
+    LaneCase(13, "multitasc++", n=4, lat_scale=0.15),        # control
+    LaneCase(14, "static", n=5, lat_scale=0.1, churn=True, offline=True),
+)
+
+
+def test_churn_mix_each_lane_matches_serial():
+    """Heterogeneous churn schedules + arrival tensors in one batch:
+    every lane bitwise equal to its own B=1 run (the batch pools a
+    larger window budget from the churn/drift lanes' longer horizons —
+    the drain early-exit must absorb that surplus identically)."""
+    specs, streams, lat, slo, kw = pack(CHURN_MIX)
+    out = jaxsim.run_sweep(specs, streams, lat, slo, SERVERS, **kw)
+    for i, case in enumerate(CHURN_MIX):
+        assert_lane_bitwise(out, i, _solo(case), case.n)
+
+
+def test_churn_lane_independent_of_companions():
+    """A churn lane's results don't depend on which scenario lanes share
+    the batch: a 2-lane sub-batch reproduces the same lanes bitwise."""
+    sub = (CHURN_MIX[1], CHURN_MIX[3])
+    specs, streams, lat, slo, kw = pack(sub)
+    out = jaxsim.run_sweep(specs, streams, lat, slo, SERVERS, **kw)
+    for i, case in enumerate(sub):
+        assert_lane_bitwise(out, i, _solo(case), case.n)
+
+
+def test_churn_junk_beyond_lane_width_is_inert():
+    """Junk join/leave schedules and arrival times in a narrower lane's
+    padding rows (the engine keeps them inert via the inf-latency mask,
+    and the pooled duration lead only reads real rows)."""
+    specs, streams, lat, slo, kw = pack(CHURN_MIX)
+    clean = jaxsim.run_sweep(specs, streams, lat, slo, SERVERS, **kw)
+    specs_j, streams_j, lat_j, slo_j, kw_j = pack(CHURN_MIX, junk_seed=77)
+    junk = jaxsim.run_sweep(specs_j, streams_j, lat_j, slo_j, SERVERS,
+                            **kw_j)
+    for i, case in enumerate(CHURN_MIX):
+        assert_lane_bitwise(junk, i,
+                            {k: (np.asarray(v)[i] if k != "traces" else
+                                 {tk: np.asarray(tv)[i]
+                                  for tk, tv in v.items()})
+                             for k, v in clean.items()}, case.n)
+
+
+def test_scenario_values_are_traced():
+    """Recompile guard for the scenario inputs: changing leave_t values
+    across calls must hit the warm core (join_t and arrive also stay
+    traced, but varying them can legitimately change the derived window
+    budget — i.e. the static key — so the cross-call check uses leave,
+    which never feeds the duration)."""
+    specs, streams, lat, slo, kw = pack(CHURN_MIX)
+    jaxsim.run_sweep(specs, streams, lat, slo, SERVERS, **kw)
+    warm = jaxsim.stats_snapshot()
+    kw2 = dict(kw, leave_t=np.where(np.isfinite(kw["leave_t"]),
+                                    kw["leave_t"] * 0.9, np.inf))
+    streams2 = {k: np.array(v) for k, v in streams.items()}
+    jaxsim.run_sweep(specs, streams2, np.array(lat), np.array(slo),
+                     SERVERS, **kw2)
+    after = jaxsim.stats_snapshot()
+    assert after["cores_built"] == warm["cores_built"]
+    assert after["backend_compiles"] == warm["backend_compiles"]
 
 
 def test_junk_beyond_lane_width_is_inert():
@@ -213,7 +314,8 @@ def test_b1_rides_the_same_core():
     """The serial bypass is gone: B=1 must build the same lane-aligned
     core (cores_built ticks once per static structure, not per path)."""
     case = dataclasses.replace(MIX[0], seed=42)
-    spec, streams, lat, slo, tier, cu, os_, of_ = _lane_inputs(case, 48)
+    spec, streams, lat, slo, tier, cu, os_, of_, _, _ = \
+        _lane_inputs(case, 48)
     spec = dataclasses.replace(spec, samples_per_device=48)
     # slowest device first so a narrower slice keeps the pooled max
     # latency (same derived window count -> same static structure)
@@ -312,3 +414,10 @@ def test_frontier_invariants_heterogeneous_mix():
     """The deterministic anchor: the full 5-lane mix through the
     stepper, invariants checked every iteration."""
     _drive_and_check(MIX[:3], samples=10)
+
+
+def test_frontier_invariants_churn_mix():
+    """Scenario lanes through the real loop body: frontier monotonicity
+    and the drain guarantee hold with departures (a departed device's
+    stream counts as exhausted) and arrival-gapped completions."""
+    _drive_and_check(CHURN_MIX[:3], samples=10)

@@ -71,3 +71,28 @@ def test_bvsb_kernel_used_in_decision_path():
     kops.use_kernels(True)
     np.testing.assert_allclose(c1, c2, atol=1e-5)
     np.testing.assert_array_equal(t1, t2)
+
+
+def test_bench_schema_constants_in_lockstep():
+    """benchmarks/run.py stamps the bench json with BENCH_SCHEMA and
+    tools/check_bench.py refuses a json whose _schema differs from its
+    own copy — the two constants (and the committed baseline) must
+    move together or every CI bench gate fails closed."""
+    import json
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    import importlib.util
+
+    def load(name, rel):
+        spec = importlib.util.spec_from_file_location(name, root / rel)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+    run_mod = load("bench_run_schema_probe", "benchmarks/run.py")
+    check_mod = load("check_bench_schema_probe", "tools/check_bench.py")
+    assert run_mod.BENCH_SCHEMA == check_mod.BENCH_SCHEMA
+    baseline = json.loads((root / "BENCH_jaxsim.json").read_text())
+    assert baseline.get("_schema") == run_mod.BENCH_SCHEMA, (
+        "committed BENCH_jaxsim.json was captured under a different "
+        "schema; re-run benchmarks/run.py --quick --json")

@@ -25,12 +25,20 @@ Wall time is reported but only warned about by default (CI machines are
 too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
 R * baseline into a failure.
 
+Before any comparison the top-level ``_schema`` of BOTH files must
+equal ``BENCH_SCHEMA`` below — a mismatch means the row layout changed
+(or a stale/pre-versioned json is being compared) and every other gate
+would be comparing different quantities; bump the constant here and in
+``benchmarks/run.py`` together and re-capture the baseline.
+
 Usage: python tools/check_bench.py NEW.json BASELINE.json [--strict-wall R]
 """
 import argparse
 import json
 import sys
 
+# must match benchmarks.run.BENCH_SCHEMA (pinned by tests/test_system.py)
+BENCH_SCHEMA = 2
 LANE_RATIO_LIMIT = 1.25
 
 
@@ -55,12 +63,22 @@ def main() -> int:
         base = json.load(f)
 
     failures, warnings = [], []
+    for name, d in (("new", new), ("baseline", base)):
+        if d.get("_schema") != BENCH_SCHEMA:
+            print(f"FAIL: {name} json schema {d.get('_schema')!r} != "
+                  f"expected {BENCH_SCHEMA} (stale json, or "
+                  f"benchmarks/run.py and tools/check_bench.py "
+                  f"disagree — re-capture and bump both)",
+                  file=sys.stderr)
+            return 1
     for fig in args.require:
         if fig not in new:
             failures.append(
                 f"{fig}: required figure missing from new run (probe "
                 f"declined to run? its gate would pass vacuously)")
     for fig, b in sorted(base.items()):
+        if fig.startswith("_"):      # metadata, not a figure row
+            continue
         if fig not in new:
             if fig not in args.require:
                 warnings.append(f"{fig}: missing from new run (skipped?)")

@@ -75,7 +75,7 @@ def main() -> None:
                             fig11_heterogeneous, fig11_lanes,
                             fig11_scaleout, fig15_transformers,
                             fig17_switching, fig19_intermittent,
-                            fig_churn, kernels_bench)
+                            fig_churn, fig_scale, kernels_bench)
     from repro.sim import jaxsim
     modules = {
         "fig4": fig4_homogeneous,
@@ -88,6 +88,7 @@ def main() -> None:
         "fig17": fig17_switching,
         "fig19": fig19_intermittent,
         "fig_churn": fig_churn,
+        "fig_scale": fig_scale,
         "ablation": ablation_components,
         "kernels": kernels_bench,
     }

@@ -48,3 +48,40 @@ def decide(thresholds, tier_ids, n_tiers, c_lower, c_upper_per_tier,
 
     return jnp.where(any_tier_all_below, -1,
                      jnp.where(all_above, 1, 0)).astype(jnp.int32)
+
+
+def decide_partials(thresholds, tier_ids, n_tiers, c_lower,
+                    c_upper_per_tier, active=None):
+    """Per-shard partial sums of ``decide``'s reductions.
+
+    For a fleet whose device axis is sharded (jaxsim.run_device_sharded)
+    each shard computes these over its local slice, psums the dict, and
+    feeds the totals to ``decide_from_partials`` — the same S(C) as
+    ``decide`` over the whole fleet, since every quantity the decision
+    compares is a sum over devices. Counts are exact in float32 up to
+    2^24 devices.
+    """
+    thresholds = jnp.asarray(thresholds)
+    tier_ids = jnp.asarray(tier_ids)
+    if active is None:
+        active = jnp.ones(thresholds.shape, bool)
+    below = (thresholds < c_lower) | ~active
+    above = (thresholds > jnp.asarray(c_upper_per_tier)[tier_ids]) | ~active
+    oh = jax.nn.one_hot(tier_ids, n_tiers, dtype=jnp.float32)
+    return {
+        "count": oh.sum(axis=0),
+        "active": (oh * active[:, None].astype(jnp.float32)).sum(axis=0),
+        "below": (oh * below[:, None]).sum(axis=0),
+        "not_above": jnp.sum(~above).astype(jnp.float32),
+        "any_active": jnp.sum(active).astype(jnp.float32),
+    }
+
+
+def decide_from_partials(p):
+    """S(C) from (already summed) ``decide_partials`` output."""
+    tier_all_below = p["below"] >= p["count"]
+    tier_nonempty = p["active"] > 0
+    any_tier_all_below = jnp.any(tier_all_below & tier_nonempty)
+    all_above = (p["not_above"] == 0) & (p["any_active"] > 0)
+    return jnp.where(any_tier_all_below, -1,
+                     jnp.where(all_above, 1, 0)).astype(jnp.int32)

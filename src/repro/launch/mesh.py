@@ -58,6 +58,23 @@ def batch_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def device_axis_of(mesh) -> str:
+    """The single mesh axis the sim's DEVICE dimension shards over.
+
+    Device-axis sharding (``jaxsim.run_device_sharded``) places one
+    fleet's per-device state over the mesh, so it needs exactly one
+    batch axis to name in its per-event collectives — build the mesh
+    with ``make_sweep_mesh((k,))``. Multi-axis meshes are for sweep-axis
+    sharding, where lanes never talk to each other.
+    """
+    axes = batch_axes_of(mesh)
+    if len(axes) != 1:
+        raise ValueError(
+            f"device-axis sharding needs a single batch-axis mesh "
+            f"(make_sweep_mesh((k,))); got axes {axes}")
+    return axes[0]
+
+
 def n_lanes(mesh) -> int:
     """Number of shards the batch axis spreads over (1 for mesh=None)."""
     if mesh is None:

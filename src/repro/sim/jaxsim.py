@@ -237,6 +237,35 @@ masking invariant (masked writes, inert padding, per-lane reductions)
 applies to them unchanged. Only the *presence* of an arrival tensor is
 static (``JaxSimStatic.has_arrive``), so the legacy saturated path
 compiles without the (B, N, S) buffer or the per-event arrival gather.
+
+Fleet scale: segmented frontier + device-axis sharding
+------------------------------------------------------
+At 100k devices the flat per-event argmin (O(N) per event) and the
+dense stream generator (O(N*S) float64 temps) dominate. Three opt-in
+mechanisms (full design in docs/ARCHITECTURE.md, probed end to end by
+benchmarks/fig_scale.py, pinned by tests/test_scale.py):
+
+* ``frontier_seg`` (kwarg on ``run``/``run_sweep``/...): groups the
+  device axis into segments of G ~ sqrt(N) with an incrementally
+  maintained per-segment min; each event touches one segment (argmin
+  over N/G mins + a G-wide completion slice). Auto-on at
+  ``n_pad >= SEG_AUTO_MIN``; bitwise equal to the flat path — ties
+  spanning segments drain over several pops (launches gated on
+  ``t_dev > t``), so only ``n_events`` may differ under ties.
+* ``synthetic.chunked_device_streams``: a lazy ``StreamChunks`` handle
+  accepted anywhere a stream dict is — generation peaks at O(chunk)
+  host memory, bitwise equal to the dense fixture-v2 tensors.
+* ``run_device_sharded(..., mesh=make_sweep_mesh((k,)))``: shards ONE
+  fleet's device axis (and segment mins) over the mesh; per event two
+  ``pmin``s elect the frontier/owner shard and ``psum``s exchange
+  O(G + MAX_POP)-sized buffers only. Fleet dynamics are bitwise equal
+  to the local segmented run; float aggregates built from per-shard
+  partial sums (``accuracy``, trace thresh/sr/acc) may differ in the
+  last ulp (psum reduction order).
+
+``JaxSimSpec.queue_cap`` bounds the replicated server ring (must
+exceed ``MAX_POP``); the realized high-water mark is reported as
+``queue_peak``.
 """
 from __future__ import annotations
 
@@ -253,12 +282,18 @@ from repro.configs.cascade_tiers import BATCH_LADDER, ServerProfile
 from repro.core import multitasc as mt
 from repro.core import multitascpp as mtpp
 from repro.core import switching
-from repro.launch.mesh import batch_axes_of, n_lanes, shard_map
+from repro.launch.mesh import (batch_axes_of, device_axis_of, n_lanes,
+                               shard_map)
 
 MAX_POP = 64
 N_BUCKET = 128          # device axis pads up to a multiple of this
 MAX_TIERS = 4           # tier axis is padded to this fixed width
 DURATION_QUANTUM = 30.0  # simulated duration rounds up to this grid (s)
+SEG_AUTO_MIN = 2048      # n_pad at/above which the segmented frontier
+#                          auto-enables (frontier_seg=None); below it the
+#                          flat argmin is faster and stays the default so
+#                          small-fleet sweeps keep their exact compiled
+#                          cores (and n_events counts)
 
 SCHED_CODES = {"multitasc++": 0, "multitasc": 1, "static": 2}
 
@@ -286,6 +321,15 @@ class JaxSimSpec:
     c_lower: float = switching.DEFAULT_C_LOWER
     extra_time: float = 40.0
     server_init: int = 0
+    # optional override of the server queue ring capacity. The default
+    # (n_pad * samples + MAX_POP) can absorb every sample being forwarded
+    # at once and so can never drop an event, but at fleet scale it is
+    # O(total samples) of replicated memory; a closed-loop fleet whose
+    # thresholds converged forwards at roughly the server's service rate,
+    # so a much smaller ring suffices. The engine tracks the realized
+    # ``queue_peak`` metric — a run whose peak approaches the cap is
+    # under-provisioned and must be re-run with a larger cap.
+    queue_cap: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -307,6 +351,13 @@ class JaxSimStatic:
     # saturated path compiles without the (B, N, S) buffer, its
     # transfer/donation, or the per-event arrival gather
     has_arrive: bool = False
+    # segmented-frontier segment width G (0 = flat argmin). When on, the
+    # event step touches one G-wide segment plus the (n_pad / G,)
+    # segment-min vector instead of full n_pad-wide rows — per-event cost
+    # O(G + n_pad / G) instead of O(n_pad). Static: it changes the
+    # compiled core's structure (see "Fleet scale" in
+    # docs/ARCHITECTURE.md).
+    seg: int = 0
 
 
 @dataclasses.dataclass
@@ -317,6 +368,7 @@ class SweepStats:
     points: int = 0             # sweep points simulated
     events: int = 0             # event-loop iterations across all points
     sharded_points: int = 0     # points executed by a >1-lane sharded core
+    device_sharded_points: int = 0  # points run with the DEVICE axis sharded
 
 
 stats = SweepStats()
@@ -339,9 +391,47 @@ def stats_snapshot() -> Dict[str, int]:
     return dataclasses.asdict(stats)
 
 
+def _seg_layout(n_pad: int, frontier_seg, device_shards: int = 1):
+    """Resolve ``(seg, n_pad)`` for the frontier structure.
+
+    ``frontier_seg``: ``None`` auto-enables the segmented frontier at
+    ``n_pad >= SEG_AUTO_MIN`` (so existing small-fleet sweeps keep their
+    flat cores bitwise), ``False``/``0`` forces the flat argmin,
+    ``True`` forces segments at the auto size, and a positive
+    ``N_BUCKET`` multiple forces that exact segment width. When on,
+    ``n_pad`` rounds up so every shard holds a whole number of segments.
+    """
+    if frontier_seg is False or (frontier_seg is not None
+                                 and not isinstance(frontier_seg, bool)
+                                 and int(frontier_seg) == 0):
+        if device_shards > 1:
+            raise ValueError(
+                "device-axis sharding requires the segmented frontier "
+                "(frontier_seg must not be disabled)")
+        return 0, n_pad
+    if frontier_seg is None and device_shards <= 1 and n_pad < SEG_AUTO_MIN:
+        return 0, n_pad
+    if frontier_seg is None or isinstance(frontier_seg, bool):
+        # ~sqrt(n) segments, tile-aligned: G doubles from N_BUCKET until
+        # G^2 covers n_pad, balancing the O(G) segment slice against the
+        # O(n_pad / G) head reduction
+        g = N_BUCKET
+        while g * g < n_pad:
+            g *= 2
+    else:
+        g = int(frontier_seg)
+        if g <= 0 or g % N_BUCKET:
+            raise ValueError(
+                f"frontier_seg must be a positive multiple of {N_BUCKET},"
+                f" got {g}")
+    quantum = g * max(1, device_shards)
+    return g, -(-n_pad // quantum) * quantum
+
+
 def _static_of(spec: JaxSimSpec, n_servers: int, max_lat: float,
                n_stream: int | None = None, lead: float = 0.0,
-               has_arrive: bool = False) -> JaxSimStatic:
+               has_arrive: bool = False, frontier_seg=None,
+               device_shards: int = 1) -> JaxSimStatic:
     # ``lead`` = pooled worst-case head start before a device's last
     # sample can begin (max over real devices of join_t + arrive[-1]):
     # zero for the legacy saturated model, so the derived window count —
@@ -351,6 +441,12 @@ def _static_of(spec: JaxSimSpec, n_servers: int, max_lat: float,
     # bucket from the packed stream width: lanes with different device
     # counts (n_real is traced) share one static structure and one core
     n_pad = -(-(n_stream or spec.n_devices) // N_BUCKET) * N_BUCKET
+    seg, n_pad = _seg_layout(n_pad, frontier_seg, device_shards)
+    cap = n_pad * spec.samples_per_device + MAX_POP
+    if spec.queue_cap is not None:
+        if spec.queue_cap <= MAX_POP:
+            raise ValueError(f"queue_cap must exceed MAX_POP={MAX_POP}")
+        cap = min(cap, int(spec.queue_cap))
     # every event-loop iteration consumes a device completion and/or
     # launches a batch over >= 1 queued sample, so 2 * samples + slack
     # bounds the whole sim; per-window it is a pure safety valve
@@ -359,8 +455,7 @@ def _static_of(spec: JaxSimSpec, n_servers: int, max_lat: float,
         n_servers=n_servers, window=float(spec.window),
         n_windows=int(-(-duration // spec.window)),
         max_events_per_window=2 * n_pad * spec.samples_per_device + MAX_POP,
-        cap=n_pad * spec.samples_per_device + MAX_POP,
-        has_arrive=has_arrive)
+        cap=cap, has_arrive=has_arrive, seg=seg)
 
 
 def _params_of(spec: JaxSimSpec, servers: Sequence[ServerProfile],
@@ -379,7 +474,8 @@ def _params_of(spec: JaxSimSpec, servers: Sequence[ServerProfile],
 
 def run(spec: JaxSimSpec, streams, dev_latency, slo, servers:
         Sequence[ServerProfile], *, tier_ids=None, c_upper=None,
-        offline_start=None, offline_for=None, join_t=None, leave_t=None):
+        offline_start=None, offline_for=None, join_t=None, leave_t=None,
+        frontier_seg=None):
     """Single sweep point: ``run_sweep`` with B=1, batch axis stripped.
 
     Args:
@@ -416,12 +512,14 @@ def run(spec: JaxSimSpec, streams, dev_latency, slo, servers:
     out = run_sweep([spec], streams, dev_latency, slo, servers,
                     tier_ids=tier_ids, c_upper=c_upper,
                     offline_start=offline_start, offline_for=offline_for,
-                    join_t=join_t, leave_t=leave_t)
+                    join_t=join_t, leave_t=leave_t,
+                    frontier_seg=frontier_seg)
     return jax.tree.map(lambda x: x[0], out)
 
 
 def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-             offline_start, offline_for, join_t=None, leave_t=None):
+             offline_start, offline_for, join_t=None, leave_t=None,
+             frontier_seg=None, device_shards=1):
     """Validate and stack a sweep's host-side inputs.
 
     Returns ``(static, params, srv, arrays, b, n)`` where ``params`` is a
@@ -436,6 +534,13 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     if not specs:
         raise ValueError("run_sweep needs at least one spec")
 
+    if hasattr(streams, "materialize"):
+        # a synthetic.StreamChunks handle: the whole-sweep paths need the
+        # dense tensors anyway (one transfer into the donated buffers);
+        # chunk-at-a-time fill keeps generation's working set at one
+        # chunk. Callers that want truly chunked consumption iterate
+        # streams.chunks() themselves (benchmarks/fig_scale.py).
+        streams = streams.materialize()
     conf = np.asarray(streams["confidence"], np.float32)
     cl = np.asarray(streams["correct_light"], np.int32)
     ch = np.asarray(streams["correct_heavy"], np.int32)
@@ -506,7 +611,7 @@ def _prepare(specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
     lead_max = float(lead[real_mask].max()) if np.any(real_mask) else 0.0
 
     statics = {_static_of(sp, len(servers), max_lat, n, lead_max,
-                          arrive is not None)
+                          arrive is not None, frontier_seg, device_shards)
                for sp in specs}
     if len(statics) != 1:
         raise ValueError(
@@ -586,7 +691,8 @@ def _finalize(out, b, n):
 def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
               dev_latency, slo, servers: Sequence[ServerProfile], *,
               tier_ids=None, c_upper=None, offline_start=None,
-              offline_for=None, join_t=None, leave_t=None):
+              offline_for=None, join_t=None, leave_t=None,
+              frontier_seg=None):
     """Batched sweep: B points through one lane-aligned, jit-compiled core.
 
     Args: as ``run``, with a leading batch axis B —
@@ -612,7 +718,8 @@ def run_sweep(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]], streams,
     """
     static, params, srv, arrays, b, n = _prepare(
         specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-        offline_start, offline_for, join_t, leave_t)
+        offline_start, offline_for, join_t, leave_t,
+        frontier_seg=frontier_seg)
     return _run_local(static, params, srv, arrays, b, n)
 
 
@@ -639,7 +746,8 @@ def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
                       streams, dev_latency, slo,
                       servers: Sequence[ServerProfile], *, mesh=None,
                       tier_ids=None, c_upper=None, offline_start=None,
-                      offline_for=None, join_t=None, leave_t=None):
+                      offline_for=None, join_t=None, leave_t=None,
+                      frontier_seg=None):
     """``run_sweep`` with the B axis sharded over a ``jax.sharding`` mesh.
 
     Same argument contract and return value as ``run_sweep`` (build the
@@ -659,10 +767,11 @@ def run_sweep_sharded(specs: Union[JaxSimSpec, Sequence[JaxSimSpec]],
                          tier_ids=tier_ids, c_upper=c_upper,
                          offline_start=offline_start,
                          offline_for=offline_for, join_t=join_t,
-                         leave_t=leave_t)
+                         leave_t=leave_t, frontier_seg=frontier_seg)
     static, params, srv, arrays, b, n = _prepare(
         specs, streams, dev_latency, slo, servers, tier_ids, c_upper,
-        offline_start, offline_for, join_t, leave_t)
+        offline_start, offline_for, join_t, leave_t,
+        frontier_seg=frontier_seg)
     if b == 1:
         return _run_local(static, params, srv, arrays, b, n)
     b_pad = -(-b // lanes) * lanes
@@ -714,6 +823,119 @@ BOUNDARY_FIELDS = ("thresh", "mult", "win_met", "win_total", "server_idx",
                    "w", "k", "active")
 
 
+def _seg_phases(static: JaxSimStatic):
+    """Shared segment-event arithmetic for the segmented engines.
+
+    The local segmented lane (``_engine_fns`` with ``static.seg > 0``)
+    and the device-sharded core (``_device_engine``) are the SAME math
+    with a psum exchange spliced between these phases — factoring the
+    phases here makes their bitwise parity hold by construction:
+
+    * ``completion(dev, t, base, gbase, has_due)`` — all device
+      completions of one G-wide segment at instant ``t``. ``dev`` holds
+      the owning array set (full arrays locally, the shard's local slice
+      sharded) with flattened stream views; ``base`` is the segment
+      start within those arrays and ``gbase`` its global device-id base.
+      Returns ``(seg_upd, append, seg_min_new, comp_any)`` — per-segment
+      state slices to write back at ``base``, a G-wide append buffer
+      with GLOBAL device ids (all-zero when ``has_due`` is false, so a
+      psum over shards reproduces the owner's buffer), the segment's new
+      partial min, and whether any local completion happened.
+    * ``apply_append(q_start, q_dev, q_samp, tail, append)`` — ring
+      writes for the buffer; pure in replicated state, so every shard
+      applies the identical update.
+    * ``pop_calc(t, q_start, q_dev, q_samp, head, server_idx, srv,
+      qlen, can_pop)`` — the ladder batch assembled from the ring head;
+      returns the popped lanes' global device ids / samples / latencies.
+      Counter scatters happen at the caller, which owns the (local or
+      full) per-device arrays.
+    """
+    G, s, cap = static.seg, static.samples_per_device, static.cap
+    ladder = jnp.asarray(BATCH_LADDER, jnp.int32)
+
+    def completion(dev, t, base, gbase, has_due):
+        def dsl(a):
+            return jax.lax.dynamic_slice_in_dim(a, base, G)
+        dn, cur = dsl(dev["dev_next"]), dsl(dev["cursor"])
+        th = dsl(dev["thresh"])
+        lat, slo = dsl(dev["dev_latency"]), dsl(dev["slo"])
+        leave = dsl(dev["leave_t"])
+        offs, offf = dsl(dev["off_start"]), dsl(dev["off_for"])
+        ar = jnp.arange(G)
+        due = (dn <= t) & (cur < s) & has_due
+        departs = due & (dn >= leave)
+        done = due & ~departs
+        cj = jnp.clip(cur, 0, s - 1)
+        flat_ix = (base + ar) * s + cj
+        conf_j = dev["conf_flat"][flat_ix]
+        local = conf_j >= th                     # Eq. 3
+        comp_local = done & local
+        met_local = lat <= slo
+        fwd_mask = done & ~local
+        cursor2 = jnp.where(departs, s, cur + done)
+        if static.has_arrive:
+            arrive_next = dev["arrive_flat"][
+                (base + ar) * s + jnp.clip(cursor2, 0, s - 1)]
+            start_next = jnp.maximum(dn, arrive_next)
+        else:
+            start_next = dn
+        off_end = offs + offf
+        t_c = start_next + lat
+        t_c = jnp.where((t_c >= offs) & (t_c < off_end), off_end, t_c)
+        dn2 = jnp.where(done, t_c, dn)
+        dn2 = jnp.where(departs, jnp.inf, dn2)
+        seg_upd = {
+            "dev_next": dn2,
+            "cursor": cursor2,
+            "win_met": dsl(dev["win_met"]) + (comp_local & met_local),
+            "win_total": dsl(dev["win_total"]) + comp_local,
+            "tot_met": dsl(dev["tot_met"]) + (comp_local & met_local),
+            "tot": dsl(dev["tot"]) + comp_local,
+            "correct": dsl(dev["correct"])
+                       + comp_local * dev["cl_flat"][flat_ix],
+            "fwd": dsl(dev["fwd"]) + fwd_mask,
+        }
+        append = {
+            "start": jnp.where(fwd_mask, dn - lat, 0.0).astype(jnp.float32),
+            "dev": jnp.where(fwd_mask, gbase + ar, 0).astype(jnp.int32),
+            "samp": jnp.where(fwd_mask, cj, 0).astype(jnp.int32),
+            "fwd": fwd_mask.astype(jnp.int32),
+        }
+        seg_min_new = jnp.min(jnp.where(cursor2 < s, dn2, jnp.inf))
+        return seg_upd, append, seg_min_new, jnp.any(comp_local)
+
+    def apply_append(q_start, q_dev, q_samp, tail, append):
+        fwd = append["fwd"] > 0
+        pos = tail + jnp.cumsum(append["fwd"]) - 1
+        # non-forwarding rows aim at index cap and are dropped: an
+        # in-ring dummy slot would collide with a REAL append once a
+        # small queue_cap wraps tail past it (duplicate-index scatter,
+        # order-dependent)
+        posm = jnp.where(fwd, pos % cap, cap)
+        q_start = q_start.at[posm].set(append["start"], mode="drop")
+        q_dev = q_dev.at[posm].set(append["dev"], mode="drop")
+        q_samp = q_samp.at[posm].set(append["samp"], mode="drop")
+        return q_start, q_dev, q_samp, tail + jnp.sum(append["fwd"])
+
+    def pop_calc(t, q_start, q_dev, q_samp, head, server_idx, srv, qlen,
+                 can_pop):
+        braw = jnp.minimum(qlen, srv["max_batch"][server_idx])
+        b = jnp.max(jnp.where(ladder <= braw, ladder, 1))
+        lanes = jnp.arange(MAX_POP)
+        take = (lanes < b) & can_pop
+        qidx = (head + lanes) % cap
+        starts = q_start[qidx]
+        devs = jnp.where(take, q_dev[qidx], 0)
+        samps = q_samp[qidx]
+        lat_b = srv["base_lat"][server_idx] * (
+            1.0 + srv["scaling"][server_idx] * (b - 1).astype(jnp.float32))
+        finish = t + lat_b
+        return {"take": take, "devs": devs, "samps": samps, "b": b,
+                "finish": finish, "latency": finish - starts}
+
+    return completion, apply_append, pop_calc
+
+
 def _engine_fns(static: JaxSimStatic):
     """Per-lane (unbatched) engine pieces of the lane-aligned event loop.
 
@@ -727,6 +949,7 @@ def _engine_fns(static: JaxSimStatic):
     """
     n, s = static.n_pad, static.samples_per_device
     window, cap = static.window, static.cap
+    G = static.seg
     ladder = jnp.asarray(BATCH_LADDER, jnp.int32)
 
     def defer_offline(t_complete, c):
@@ -737,17 +960,28 @@ def _engine_fns(static: JaxSimStatic):
         return jnp.where(offline, off_end, t_complete)
 
     def next_event_t(st):
-        # next device completion; padded / finished devices sit at +inf
-        t_dev = jnp.min(jnp.where(st["cursor"] < s, st["dev_next"],
-                                  jnp.inf))
+        # next device completion; padded / finished devices sit at +inf.
+        # Segmented frontier: the completion min reduces over the
+        # maintained per-segment partial mins instead of the full fleet
+        if G:
+            t_dev = jnp.min(st["seg_min"])
+        else:
+            t_dev = jnp.min(jnp.where(st["cursor"] < s, st["dev_next"],
+                                      jnp.inf))
         # the server matters only while a batch is in flight AND samples
         # wait behind it: launches otherwise happen inside the event that
         # enqueued the triggering sample, and an in-flight batch over an
         # empty queue changes nothing when it lands (SR attribution is at
-        # launch)
+        # launch). The segmented path adds a pending-launch case — a
+        # free server over a non-empty queue at the current instant
+        # (possible there because a tie's segments drain one event at a
+        # time before the launch; see lane_event_seg)
         qlen = st["tail"] - st["head"]
         t_srv = jnp.where((st["busy_until"] > st["t"]) & (qlen > 0),
                           st["busy_until"], jnp.inf)
+        if G:
+            t_srv = jnp.where((st["busy_until"] <= st["t"]) & (qlen > 0),
+                              st["t"], t_srv)
         return jnp.minimum(t_dev, t_srv)
 
     def drained(st, c):
@@ -785,9 +1019,16 @@ def _engine_fns(static: JaxSimStatic):
             "last_batch": jnp.zeros((), jnp.int32),
             "server_idx": c["server_init"].astype(jnp.int32),
             "last_done_t": jnp.zeros((), jnp.float32),
+            "max_qlen": jnp.zeros((), jnp.int32),
             "w": jnp.zeros((), jnp.int32),
             "k": jnp.zeros((), jnp.int32),
         }
+        if G:
+            # per-segment partial min over (cursor < s -> dev_next); the
+            # invariant the seg event step maintains incrementally
+            st["seg_min"] = jnp.where(
+                st["cursor"] < s, st["dev_next"],
+                jnp.inf).reshape(n // G, G).min(axis=1)
         st["frontier"] = next_event_t(st)
         st["active"] = ~drained(st, c) & (static.n_windows > 0)
         st["traces"] = {key: jnp.full((static.n_windows,), jnp.nan,
@@ -824,14 +1065,15 @@ def _engine_fns(static: JaxSimStatic):
         fwd_mask = done & ~local
         st_fwd = st["fwd"] + fwd_mask
         pos = st["tail"] + jnp.cumsum(fwd_mask) - 1
-        posm = jnp.where(fwd_mask, pos % cap, cap - 1)  # dummy write slot ok
+        # non-forwarding rows aim at index cap and are dropped: an
+        # in-ring dummy slot would collide with a REAL append once a
+        # small queue_cap wraps tail past it (duplicate-index scatter,
+        # order-dependent)
+        posm = jnp.where(fwd_mask, pos % cap, cap)
         q_start = st["q_start"].at[posm].set(
-            jnp.where(fwd_mask, st["dev_next"] - dev_latency,
-                      st["q_start"][posm]))
-        q_dev = st["q_dev"].at[posm].set(
-            jnp.where(fwd_mask, jnp.arange(n), st["q_dev"][posm]))
-        q_samp = st["q_samp"].at[posm].set(
-            jnp.where(fwd_mask, cj, st["q_samp"][posm]))
+            st["dev_next"] - dev_latency, mode="drop")
+        q_dev = st["q_dev"].at[posm].set(jnp.arange(n), mode="drop")
+        q_samp = st["q_samp"].at[posm].set(cj, mode="drop")
         tail = st["tail"] + jnp.sum(fwd_mask)
 
         # a departed device's stream counts as exhausted (drained() and
@@ -882,6 +1124,8 @@ def _engine_fns(static: JaxSimStatic):
         busy_until = jnp.where(can_pop, finish, st["busy_until"])
         last_batch = jnp.where(can_pop, b, st["last_batch"])
         last_done_t = jnp.where(can_pop, finish, last_done_t)
+        max_qlen = jnp.where(go, jnp.maximum(st["max_qlen"], qlen),
+                             st["max_qlen"])
 
         st2 = dict(
             st, t=jnp.where(go, t, st["t"]), n_events=st["n_events"] + go,
@@ -890,9 +1134,87 @@ def _engine_fns(static: JaxSimStatic):
             fwd=st_fwd, q_start=q_start, q_dev=q_dev, q_samp=q_samp,
             head=head, tail=tail, busy_until=busy_until,
             last_batch=last_batch, last_done_t=last_done_t,
-            k=st["k"] + go)
+            max_qlen=max_qlen, k=st["k"] + go)
         # the pre-extracted frontier: the only place it ever moves — a
         # window boundary touches no queue/cursor/server-timing state
+        st2["frontier"] = jnp.where(go, next_event_t(st2), st["frontier"])
+        return st2
+
+    completion_seg, apply_append_seg, pop_calc_seg = (
+        _seg_phases(static) if G else (None, None, None))
+
+    def lane_event_seg(st, c, srv, go):
+        """Segmented-frontier event step: one segment per instant.
+
+        The argmin picks the LOWEST-INDEX segment whose partial min
+        equals the frontier, processes all of that segment's completions
+        at ``t``, and updates only its G-wide state slices plus its
+        ``seg_min`` entry — O(G + n/G) work per event instead of O(n).
+        Simultaneous completions across segments drain one segment per
+        iteration in ascending segment order (== the flat engine's
+        device-index append order), and the batch launch is gated on
+        ``t_dev > t`` so it fires only after the last same-instant
+        segment — the resulting trajectory is bitwise identical to the
+        flat engine's, though ``n_events`` counts the extra iterations.
+        """
+        t = st["frontier"]
+        sidx = jnp.argmin(st["seg_min"]).astype(jnp.int32)
+        has_due = go & (st["seg_min"][sidx] <= t)
+        base = sidx * G
+        dev = {
+            "dev_next": st["dev_next"], "cursor": st["cursor"],
+            "thresh": st["thresh"], "win_met": st["win_met"],
+            "win_total": st["win_total"], "tot_met": st["tot_met"],
+            "tot": st["tot"], "correct": st["correct"], "fwd": st["fwd"],
+            "dev_latency": c["dev_latency"], "slo": c["slo"],
+            "leave_t": c["leave_t"], "off_start": c["off_start"],
+            "off_for": c["off_for"],
+            "conf_flat": c["conf"].reshape(-1),
+            "cl_flat": c["cl"].reshape(-1),
+            "arrive_flat": (c["arrive"].reshape(-1) if static.has_arrive
+                            else c["arrive"]),
+        }
+        seg_upd, append, seg_min_new, comp_any = completion_seg(
+            dev, t, base, base, has_due)
+        wb = {key: jax.lax.dynamic_update_slice_in_dim(st[key], upd_k,
+                                                       base, axis=0)
+              for key, upd_k in seg_upd.items()}
+        seg_min = st["seg_min"].at[sidx].set(
+            jnp.where(has_due, seg_min_new, st["seg_min"][sidx]))
+        t_dev = jnp.min(seg_min)
+        q_start, q_dev, q_samp, tail = apply_append_seg(
+            st["q_start"], st["q_dev"], st["q_samp"], st["tail"], append)
+        last_done_t = jnp.where(comp_any, t, st["last_done_t"])
+
+        # --- server dynamic batching: only once the instant's completions
+        # have all drained (t_dev > t), so ties across segments enqueue in
+        # full device-index order before the ladder sizes the batch ------
+        qlen = tail - st["head"]
+        can_pop = go & (t >= st["busy_until"]) & (qlen > 0) & (t_dev > t)
+        p = pop_calc_seg(t, q_start, q_dev, q_samp, st["head"],
+                         st["server_idx"], srv, qlen, can_pop)
+        met_srv = (p["latency"] <= c["slo"][p["devs"]]) & p["take"]
+        win_met = wb["win_met"].at[p["devs"]].add(met_srv)
+        win_total = wb["win_total"].at[p["devs"]].add(p["take"])
+        tot_met = wb["tot_met"].at[p["devs"]].add(met_srv)
+        tot = wb["tot"].at[p["devs"]].add(p["take"])
+        correct = wb["correct"].at[p["devs"]].add(
+            p["take"] * c["ch"][p["devs"], p["samps"], st["server_idx"]])
+        head = st["head"] + jnp.where(can_pop, p["b"], 0)
+        busy_until = jnp.where(can_pop, p["finish"], st["busy_until"])
+        last_batch = jnp.where(can_pop, p["b"], st["last_batch"])
+        last_done_t = jnp.where(can_pop, p["finish"], last_done_t)
+        max_qlen = jnp.where(go, jnp.maximum(st["max_qlen"], qlen),
+                             st["max_qlen"])
+
+        st2 = dict(
+            st, t=jnp.where(go, t, st["t"]), n_events=st["n_events"] + go,
+            dev_next=wb["dev_next"], cursor=wb["cursor"], win_met=win_met,
+            win_total=win_total, tot_met=tot_met, tot=tot, correct=correct,
+            fwd=wb["fwd"], q_start=q_start, q_dev=q_dev, q_samp=q_samp,
+            head=head, tail=tail, busy_until=busy_until,
+            last_batch=last_batch, last_done_t=last_done_t,
+            seg_min=seg_min, max_qlen=max_qlen, k=st["k"] + go)
         st2["frontier"] = jnp.where(go, next_event_t(st2), st["frontier"])
         return st2
 
@@ -994,12 +1316,16 @@ def _engine_fns(static: JaxSimStatic):
                               / jnp.maximum(final["tot"].sum(), 1),
             "completed": final["tot"].sum(),
             "queue_left": final["tail"] - final["head"],
+            # realized queue high-water mark: must stay clear of
+            # static.cap when JaxSimSpec.queue_cap shrinks the ring
+            "queue_peak": final["max_qlen"],
             "n_events": final["n_events"],
             "traces": final["traces"],
             "final_thresh": final["thresh"],
         }
 
-    return lane_init, lane_event, lane_boundary, lane_metrics
+    return (lane_init, lane_event_seg if G else lane_event, lane_boundary,
+            lane_metrics)
 
 
 def _batched_engine(static, params, srv, conf, cl, ch, arrive, dev_latency,
@@ -1079,6 +1405,485 @@ def _run_core_lanes(static, params, srv, conf, cl, ch, arrive, dev_latency,
         tier_ids, c_upper, off_start, off_for, join_t, leave_t)
     final = jax.lax.while_loop(lambda st: jnp.any(st["active"]), body, st0)
     return finalize(final)
+
+
+def _device_engine(static: JaxSimStatic, k: int, axis: str):
+    """One shard's slice of the device-axis-sharded event loop (B=1).
+
+    Each of the ``k`` shards holds ``n_pad / k`` devices' state, streams
+    and segment mins; queue/server/time/window state is replicated and
+    every shard applies the identical update to it. The per-event
+    arithmetic is ``_seg_phases`` — the same closures the local
+    segmented lane runs — with a small fixed set of collectives spliced
+    between the phases (frontier pmin + owner-segment pmin, a G-wide
+    append psum, a MAX_POP-wide gather psum, and two boundary partial-
+    sum psums on window-closing iterations). All collective operands are
+    O(G + MAX_POP + MAX_TIERS), independent of fleet size. The fleet's
+    *dynamics* (thresholds, queue contents, switching, event order) are
+    bitwise identical to the local segmented engine's: every quantity
+    that feeds back into state is an exact integer sum or an elementwise
+    float op. Only reported float *aggregates* (trace-row means, the
+    ``accuracy`` metric) may differ in the last ulp, because a psum of
+    per-shard partial sums associates float additions differently than
+    one flat ``jnp.sum``.
+    """
+    n, s = static.n_pad, static.samples_per_device
+    window, cap, G = static.window, static.cap, static.seg
+    n_loc = n // k
+    n_segs_loc = n_loc // G
+    completion, apply_append, pop_calc = _seg_phases(static)
+
+    def psum(x):
+        return jax.lax.psum(x, axis)
+
+    def pmin(x):
+        return jax.lax.pmin(x, axis)
+
+    def shard_off():
+        return jax.lax.axis_index(axis).astype(jnp.int32) * n_loc
+
+    def valid_mask(c):
+        return (shard_off() + jnp.arange(n_loc)) < c["n_real"]
+
+    def defer_offline(t_complete, c):
+        off_end = c["off_start"] + c["off_for"]
+        offline = (t_complete >= c["off_start"]) & (t_complete < off_end)
+        return jnp.where(offline, off_end, t_complete)
+
+    def undrained_local(st, c):
+        return (~jnp.all(jnp.where(valid_mask(c), st["cursor"] >= s,
+                                   True))).astype(jnp.int32)
+
+    def init(c):
+        init_thresh = jnp.where(c["scheduler"] == SCHED_CODES["static"],
+                                c["static_threshold"], c["init_threshold"])
+        first = (jnp.maximum(c["join_t"], c["arrive"][:, 0])
+                 if static.has_arrive else c["join_t"])
+        st = {
+            "t": jnp.zeros((), jnp.float32),
+            "n_events": jnp.zeros((), jnp.int32),
+            "dev_next": defer_offline(first + c["dev_latency"], c),
+            "cursor": jnp.zeros((n_loc,), jnp.int32),
+            "thresh": jnp.broadcast_to(init_thresh,
+                                       (n_loc,)).astype(jnp.float32),
+            "mult": jnp.ones((n_loc,), jnp.float32),
+            "win_met": jnp.zeros((n_loc,), jnp.int32),
+            "win_total": jnp.zeros((n_loc,), jnp.int32),
+            "tot_met": jnp.zeros((n_loc,), jnp.int32),
+            "tot": jnp.zeros((n_loc,), jnp.int32),
+            "correct": jnp.zeros((n_loc,), jnp.int32),
+            "fwd": jnp.zeros((n_loc,), jnp.int32),
+            "q_start": jnp.zeros((cap,), jnp.float32),
+            "q_dev": jnp.zeros((cap,), jnp.int32),
+            "q_samp": jnp.zeros((cap,), jnp.int32),
+            "head": jnp.zeros((), jnp.int32),
+            "tail": jnp.zeros((), jnp.int32),
+            "busy_until": jnp.zeros((), jnp.float32),
+            "last_batch": jnp.zeros((), jnp.int32),
+            "server_idx": c["server_init"].astype(jnp.int32),
+            "last_done_t": jnp.zeros((), jnp.float32),
+            "max_qlen": jnp.zeros((), jnp.int32),
+            "w": jnp.zeros((), jnp.int32),
+            "k": jnp.zeros((), jnp.int32),
+        }
+        st["seg_min"] = jnp.where(
+            st["cursor"] < s, st["dev_next"],
+            jnp.inf).reshape(n_segs_loc, G).min(axis=1)
+        # queue empty at t=0: the frontier is the global completion min
+        st["frontier"] = pmin(jnp.min(st["seg_min"]))
+        drained0 = psum(undrained_local(st, c)) == 0
+        st["active"] = ~drained0 & (static.n_windows > 0)
+        st["traces"] = {key: jnp.full((static.n_windows,), jnp.nan,
+                                      jnp.float32) for key in TRACE_KEYS}
+        return st
+
+    def event(st, c, srv, go):
+        t = st["frontier"]
+        off = shard_off()
+        loc_best = jnp.min(st["seg_min"])
+        lidx = jnp.argmin(st["seg_min"]).astype(jnp.int32)
+        t_dev0 = pmin(loc_best)
+        # owner = globally lowest-index segment attaining the frontier
+        # min (ties across shards resolve to the lowest shard, matching
+        # the local engine's argmin over the concatenated seg_min)
+        cand = jnp.where(
+            loc_best == t_dev0,
+            jax.lax.axis_index(axis).astype(jnp.int32) * n_segs_loc + lidx,
+            jnp.int32(2 ** 30))
+        owner = pmin(cand)
+        mine = cand == owner
+        has_due = go & (t_dev0 <= t) & mine
+        base = jnp.where(mine, lidx, 0) * G
+        dev = {
+            "dev_next": st["dev_next"], "cursor": st["cursor"],
+            "thresh": st["thresh"], "win_met": st["win_met"],
+            "win_total": st["win_total"], "tot_met": st["tot_met"],
+            "tot": st["tot"], "correct": st["correct"], "fwd": st["fwd"],
+            "dev_latency": c["dev_latency"], "slo": c["slo"],
+            "leave_t": c["leave_t"], "off_start": c["off_start"],
+            "off_for": c["off_for"],
+            "conf_flat": c["conf"].reshape(-1),
+            "cl_flat": c["cl"].reshape(-1),
+            "arrive_flat": (c["arrive"].reshape(-1) if static.has_arrive
+                            else c["arrive"]),
+        }
+        seg_upd, append, seg_min_new, comp_any_loc = completion(
+            dev, t, base, off + base, has_due)
+        wb = {key: jax.lax.dynamic_update_slice_in_dim(st[key], upd_k,
+                                                       base, axis=0)
+              for key, upd_k in seg_upd.items()}
+        widx = jnp.where(mine, lidx, 0)
+        seg_min = st["seg_min"].at[widx].set(
+            jnp.where(has_due, seg_min_new, st["seg_min"][widx]))
+        t_dev = pmin(jnp.min(seg_min))
+        # replicate the owner's append buffer (all-zero off-owner)
+        ex = psum(dict(append, comp_any=comp_any_loc.astype(jnp.int32)))
+        comp_any = ex.pop("comp_any") > 0
+        q_start, q_dev, q_samp, tail = apply_append(
+            st["q_start"], st["q_dev"], st["q_samp"], st["tail"], ex)
+        last_done_t = jnp.where(comp_any, t, st["last_done_t"])
+
+        qlen = tail - st["head"]
+        can_pop = go & (t >= st["busy_until"]) & (qlen > 0) & (t_dev > t)
+        p = pop_calc(t, q_start, q_dev, q_samp, st["head"],
+                     st["server_idx"], srv, qlen, can_pop)
+        # popped entries' slo / heavy-correctness live on the owning
+        # shards: masked local gathers, one psum to replicate
+        ldev = p["devs"] - off
+        inr = (ldev >= 0) & (ldev < n_loc) & p["take"]
+        lclip = jnp.clip(ldev, 0, n_loc - 1)
+        g = psum({
+            "slo": jnp.where(inr, c["slo"][lclip], 0.0),
+            "ch": jnp.where(inr,
+                            c["ch"][lclip, p["samps"], st["server_idx"]],
+                            0),
+        })
+        met_srv = (p["latency"] <= g["slo"]) & p["take"]
+        win_met = wb["win_met"].at[lclip].add(jnp.where(inr, met_srv,
+                                                        False))
+        win_total = wb["win_total"].at[lclip].add(jnp.where(inr, p["take"],
+                                                            False))
+        tot_met = wb["tot_met"].at[lclip].add(jnp.where(inr, met_srv,
+                                                        False))
+        tot = wb["tot"].at[lclip].add(jnp.where(inr, p["take"], False))
+        correct = wb["correct"].at[lclip].add(
+            jnp.where(inr, p["take"] * g["ch"], 0))
+        head = st["head"] + jnp.where(can_pop, p["b"], 0)
+        busy_until = jnp.where(can_pop, p["finish"], st["busy_until"])
+        last_batch = jnp.where(can_pop, p["b"], st["last_batch"])
+        last_done_t = jnp.where(can_pop, p["finish"], last_done_t)
+        max_qlen = jnp.where(go, jnp.maximum(st["max_qlen"], qlen),
+                             st["max_qlen"])
+
+        st2 = dict(
+            st, t=jnp.where(go, t, st["t"]), n_events=st["n_events"] + go,
+            dev_next=wb["dev_next"], cursor=wb["cursor"], win_met=win_met,
+            win_total=win_total, tot_met=tot_met, tot=tot, correct=correct,
+            fwd=wb["fwd"], q_start=q_start, q_dev=q_dev, q_samp=q_samp,
+            head=head, tail=tail, busy_until=busy_until,
+            last_batch=last_batch, last_done_t=last_done_t,
+            seg_min=seg_min, max_qlen=max_qlen, k=st["k"] + go)
+        qlen2 = tail - head
+        t_srv = jnp.where(qlen2 > 0,
+                          jnp.where(busy_until > t, busy_until, t),
+                          jnp.inf)
+        st2["frontier"] = jnp.where(go, jnp.minimum(t_dev, t_srv),
+                                    st["frontier"])
+        return st2
+
+    # --- window boundary, split into collective-free cond bodies with
+    # the two partial-sum psums between them (a collective may not sit
+    # inside a lax.cond branch under shard_map, and the boundary's
+    # global quantities come in two rounds: n_active feeds the threshold
+    # update, whose output feeds the switching counts) ----------------
+    def boundary_pre(st, c):
+        valid = valid_mask(c)
+        t_end = (st["w"] + 1).astype(jnp.float32) * window
+        off_end = c["off_start"] + c["off_for"]
+        member = (t_end >= c["join_t"]) & (t_end < c["leave_t"])
+        active = (~((t_end >= c["off_start"]) & (t_end < off_end))) \
+            & member & valid
+        sr = jnp.where(st["win_total"] > 0,
+                       100.0 * st["win_met"] / jnp.maximum(st["win_total"],
+                                                           1),
+                       100.0)
+        acc_run = jnp.where(st["tot"] > 0,
+                            st["correct"] / jnp.maximum(st["tot"], 1), 1.0)
+        return {
+            "n_active": jnp.sum(active),
+            "sr_sum": jnp.sum(jnp.where(valid, sr, 0.0)),
+            "fwd_sum": jnp.sum(jnp.where(valid, st["fwd"], 0)),
+            "acc_sum": jnp.sum(jnp.where(valid, acc_run, 0.0)),
+            "undrained": undrained_local(st, c),
+        }
+
+    def zeros_pre(_st):
+        z32 = jnp.zeros((), jnp.int32)
+        zf = jnp.zeros((), jnp.float32)
+        return {"n_active": z32, "sr_sum": zf, "fwd_sum": z32,
+                "acc_sum": zf, "undrained": z32}
+
+    def boundary_mid(st, c, pre_g):
+        valid = valid_mask(c)
+        t_end = (st["w"] + 1).astype(jnp.float32) * window
+        off_end = c["off_start"] + c["off_for"]
+        member = (t_end >= c["join_t"]) & (t_end < c["leave_t"])
+        active = (~((t_end >= c["off_start"]) & (t_end < off_end))) \
+            & member & valid
+        sr = jnp.where(st["win_total"] > 0,
+                       100.0 * st["win_met"] / jnp.maximum(st["win_total"],
+                                                           1),
+                       100.0)
+        thresh, mult = st["thresh"], st["mult"]
+
+        def upd_multitascpp(_):
+            upd = mtpp.update({"thresh": thresh, "mult": mult}, sr,
+                              mtpp.MultiTASCPPConfig(
+                                  a=c["a"],
+                                  sr_target=c["sr_target"],
+                                  mult_growth=c["mult_growth"]),
+                              n_active=pre_g["n_active"], active=active)
+            return upd["thresh"], upd["mult"]
+
+        def upd_multitasc(_):
+            upd = mt.update({"thresh": thresh}, st["last_batch"],
+                            c["b_opt"],
+                            mt.MultiTASCConfig(step=c["multitasc_step"]),
+                            active=active)
+            return upd["thresh"], mult
+
+        def upd_static(_):
+            return thresh, mult
+
+        thresh2, mult2 = jax.lax.switch(
+            c["scheduler"],
+            (upd_multitascpp, upd_multitasc, upd_static), None)
+        sums = dict(
+            switching.decide_partials(thresh2, c["tier_ids"], MAX_TIERS,
+                                      c["c_lower"], c["c_upper"],
+                                      active=active),
+            thresh_sum=jnp.sum(jnp.where(active, thresh2, 0.0)))
+        return {"thresh": thresh2, "mult": mult2,
+                "win_met": jnp.where(active, 0, st["win_met"]),
+                "win_total": jnp.where(active, 0, st["win_total"]),
+                "sums": sums}
+
+    def zeros_mid(st):
+        zt = jnp.zeros((MAX_TIERS,), jnp.float32)
+        zf = jnp.zeros((), jnp.float32)
+        return {"thresh": st["thresh"], "mult": st["mult"],
+                "win_met": st["win_met"], "win_total": st["win_total"],
+                "sums": {"count": zt, "active": zt, "below": zt,
+                         "not_above": zf, "any_active": zf,
+                         "thresh_sum": zf}}
+
+    def boundary_fin(st, c, mid, sums_g, pre_g):
+        sw = switching.decide_from_partials(sums_g)
+        server_idx = jnp.clip(
+            st["server_idx"] + jnp.where(c["model_switching"] != 0, sw, 0),
+            0, static.n_servers - 1)
+        n_real_f = c["n_real"].astype(jnp.float32)
+        n_act_f = pre_g["n_active"].astype(jnp.float32)
+        row = {
+            "thresh": jnp.where(pre_g["n_active"] > 0,
+                                sums_g["thresh_sum"]
+                                / jnp.maximum(n_act_f, 1.0), jnp.nan),
+            "sr": pre_g["sr_sum"] / n_real_f,
+            "active": n_act_f / n_real_f,
+            "server_idx": server_idx.astype(jnp.float32),
+            "fwd": pre_g["fwd_sum"].astype(jnp.float32),
+            "acc": pre_g["acc_sum"] / n_real_f,
+        }
+        w2 = st["w"] + 1
+        drained_g = (st["tail"] == st["head"]) & (pre_g["undrained"] == 0)
+        upd = {
+            "thresh": mid["thresh"], "mult": mid["mult"],
+            "win_met": mid["win_met"], "win_total": mid["win_total"],
+            "server_idx": server_idx, "w": w2,
+            "k": jnp.zeros((), jnp.int32),
+            "active": (w2 < static.n_windows) & ~drained_g,
+        }
+        return upd, row
+
+    def skip_fin(st):
+        return ({key: st[key] for key in BOUNDARY_FIELDS},
+                {key: jnp.zeros((), jnp.float32) for key in TRACE_KEYS})
+
+    def metrics(final, c):
+        valid = valid_mask(c)
+        n_real_f = c["n_real"].astype(jnp.float32)
+        per_acc = final["correct"] / jnp.maximum(final["tot"], 1)
+        gsum = psum({
+            "tot": final["tot"].sum(),
+            "tot_met": final["tot_met"].sum(),
+            "fwd": final["fwd"].sum(),
+            "acc": jnp.sum(jnp.where(valid, per_acc, 0.0)),
+        })
+        return {
+            "sr": 100.0 * gsum["tot_met"] / jnp.maximum(gsum["tot"], 1),
+            "per_device_sr": 100.0 * final["tot_met"]
+                             / jnp.maximum(final["tot"], 1),
+            "per_device_acc": per_acc,
+            "accuracy": gsum["acc"] / n_real_f,
+            "throughput": gsum["tot"]
+                          / jnp.maximum(final["last_done_t"], 1e-9),
+            "forwarded_frac": gsum["fwd"] / jnp.maximum(gsum["tot"], 1),
+            "completed": gsum["tot"],
+            "queue_left": final["tail"] - final["head"],
+            "queue_peak": final["max_qlen"],
+            "n_events": final["n_events"],
+            "traces": final["traces"],
+            "final_thresh": final["thresh"],
+        }
+
+    fns = {"init": init, "event": event, "boundary_pre": boundary_pre,
+           "zeros_pre": zeros_pre, "boundary_mid": boundary_mid,
+           "zeros_mid": zeros_mid, "boundary_fin": boundary_fin,
+           "skip_fin": skip_fin, "metrics": metrics, "psum": psum}
+    return fns
+
+
+def _run_core_device(static, k, axis, params, srv, conf, cl, ch, arrive,
+                     dev_latency, slo, tier_ids, c_upper, off_start,
+                     off_for, join_t, leave_t):
+    """shard_map body for the device-axis-sharded core (one sweep point).
+
+    Receives the LOCAL (n_pad / k)-row slice of every device-dim input
+    and replicated scalars/tables; runs ONE scalar lane whose replicated
+    control state (t, frontier, window, queue pointers) keeps all shards
+    taking identical branches, so the ``lax.cond``-gated boundary stays
+    legal with its collectives hoisted to the body's top level.
+    """
+    e = _device_engine(static, k, axis)
+    consts = dict(params, conf=conf, cl=cl, ch=ch, arrive=arrive,
+                  dev_latency=dev_latency, slo=slo, tier_ids=tier_ids,
+                  c_upper=c_upper, off_start=off_start, off_for=off_for,
+                  join_t=join_t, leave_t=leave_t)
+
+    def event_go(st):
+        t_end = (st["w"] + 1).astype(jnp.float32) * static.window
+        return (st["active"] & (st["frontier"] <= t_end)
+                & (st["k"] < static.max_events_per_window))
+
+    def body(st):
+        st = e["event"](st, consts, srv, event_go(st))
+        go_b = st["active"] & ~event_go(st)
+        pre = jax.lax.cond(go_b,
+                           lambda s_: e["boundary_pre"](s_, consts),
+                           e["zeros_pre"], st)
+        pre_g = e["psum"](pre)
+        mid = jax.lax.cond(
+            go_b,
+            lambda op: e["boundary_mid"](op[0], consts, op[1]),
+            lambda op: e["zeros_mid"](op[0]), (st, pre_g))
+        sums_g = e["psum"](mid["sums"])
+        upd, row = jax.lax.cond(
+            go_b,
+            lambda op: e["boundary_fin"](op[0], consts, op[1], op[2],
+                                         op[3]),
+            lambda op: e["skip_fin"](op[0]), (st, mid, sums_g, pre_g))
+        wj = jnp.where(go_b, st["w"], static.n_windows)
+        traces = {key: st["traces"][key].at[wj].set(row[key], mode="drop")
+                  for key in TRACE_KEYS}
+        return dict(st, traces=traces, **upd)
+
+    st0 = e["init"](consts)
+    final = jax.lax.while_loop(lambda st: st["active"], body, st0)
+    return e["metrics"](final, consts)
+
+
+# device-dim per-device outputs: sharded on the device axis; everything
+# else replicated (identical on every shard by construction)
+_DEVICE_OUT_SHARDED = ("per_device_sr", "per_device_acc", "final_thresh")
+
+
+@functools.lru_cache(maxsize=64)
+def _make_core_device(static: JaxSimStatic, mesh):
+    """One executable per (static structure, mesh) for the device-axis
+    sharded core: per-shard local frontier mins, a handful of O(G)-sized
+    collectives per event (see ``_device_engine``)."""
+    stats.cores_built += 1
+    axis = device_axis_of(mesh)
+    k = n_lanes(mesh)
+    P = jax.sharding.PartitionSpec
+    dspec, rep = P(axis), P()
+    # arrays order: conf cl ch arrive lat slo tier c_upper off_start
+    # off_for join leave — c_upper (index 7) is per-tier, replicated
+    in_specs = (rep, rep) + tuple(
+        rep if i == 7 else dspec for i in range(12))
+    out_specs = {
+        key: dspec for key in _DEVICE_OUT_SHARDED}
+    out_specs.update({key: rep for key in (
+        "sr", "accuracy", "throughput", "forwarded_frac", "completed",
+        "queue_left", "queue_peak", "n_events")})
+    out_specs["traces"] = {key: rep for key in TRACE_KEYS}
+    sharded = shard_map(functools.partial(_run_core_device, static, k,
+                                          axis),
+                        mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                        check_vma=False)
+    return jax.jit(sharded, donate_argnums=(2, 3, 4, 5))
+
+
+def run_device_sharded(spec: JaxSimSpec, streams, dev_latency, slo,
+                       servers: Sequence[ServerProfile], *, mesh=None,
+                       tier_ids=None, c_upper=None, offline_start=None,
+                       offline_for=None, join_t=None, leave_t=None,
+                       frontier_seg=None):
+    """One sweep point with the DEVICE axis sharded over the mesh.
+
+    Complements ``run_sweep_sharded`` (which shards the *sweep* axis and
+    keeps each point's fleet on one chip): here a single fleet's
+    per-device state, streams and segment mins are placed over the mesh
+    — the path to 100k+ devices per lane, where one chip's memory or
+    per-event bandwidth becomes the binding constraint. Requires the
+    segmented frontier (``frontier_seg`` defaults on; ``False`` raises)
+    and a single-batch-axis mesh from ``make_sweep_mesh((k,))``; B=1
+    only — shard the sweep axis instead when you have many points.
+    ``mesh=None`` / a single-lane mesh falls back to the local
+    segmented path.
+
+    Fleet dynamics are bitwise identical to the local segmented engine
+    (and so to the flat engine); reported float aggregates (trace-row
+    means, ``accuracy``) can differ in the last ulp — see
+    ``_device_engine``.
+    """
+    if not isinstance(spec, JaxSimSpec):
+        raise ValueError("run_device_sharded takes a single JaxSimSpec "
+                         "(B=1); use run_sweep_sharded for sweeps")
+    k = n_lanes(mesh)
+    if mesh is None or k <= 1:
+        return run(spec, streams, dev_latency, slo, servers,
+                   tier_ids=tier_ids, c_upper=c_upper,
+                   offline_start=offline_start, offline_for=offline_for,
+                   join_t=join_t, leave_t=leave_t,
+                   frontier_seg=True if frontier_seg is None
+                   else frontier_seg)
+    static, params, srv, arrays, b, n = _prepare(
+        [spec], streams, dev_latency, slo, servers, tier_ids, c_upper,
+        offline_start, offline_for, join_t, leave_t,
+        frontier_seg=frontier_seg, device_shards=k)
+    if b != 1:
+        raise ValueError("run_device_sharded runs one sweep point (B=1); "
+                         f"got a stream batch of {b}")
+    params1 = {key: v[0] for key, v in params.items()}
+    arrays1 = tuple(a[0] for a in arrays)
+    dev_sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(device_axis_of(mesh)))
+    rep_sh = jax.sharding.NamedSharding(mesh,
+                                        jax.sharding.PartitionSpec())
+    core = _make_core_device(static, mesh)
+    out = core(jax.device_put(params1, rep_sh),
+               jax.device_put(srv, rep_sh),
+               *(jax.device_put(a, rep_sh if i == 7 else dev_sh)
+                 for i, a in enumerate(arrays1)))
+    out = dict(out)
+    for key in _DEVICE_OUT_SHARDED:
+        out[key] = np.asarray(out[key])[:n]
+    out["n_events"] = np.asarray(out["n_events"])
+    stats.points += 1
+    stats.events += int(out["n_events"])
+    stats.device_sharded_points += 1
+    return out
 
 
 def lane_stepper(specs, streams, dev_latency, slo,

@@ -236,6 +236,144 @@ def _reference_stream_blocks(seeds, n_devices: int, samples_per_device: int,
             for k in ("confidence", "correct_light", "correct_heavy")}
 
 
+STREAM_CHUNK_DEVICES = 4096   # default device-axis chunk of the lazy API
+
+
+class StreamChunks:
+    """Lazy device-axis-chunked view of the fixture-v2 stream tensors.
+
+    The dense ``_stream_blocks`` pass allocates ~6 float64 work arrays of
+    the full ``(n_seeds, N, M)`` shape (z/u/eps draws, the scaled ``bz``,
+    a bisection buffer, logits) — at fleet scale (N = 100k) the
+    generation *temps* dwarf the float32/int8 tensors the simulator
+    actually consumes. This object generates the SAME values (bitwise:
+    fixture ``STREAM_FIXTURE_VERSION = 2`` is unchanged) one device-axis
+    chunk at a time, so peak generation memory is O(chunk), independent
+    of the fleet size.
+
+    How chunking reproduces the block draw: a numpy ``Generator`` fills
+    any output shape sequentially from its bit stream, so chunked draws
+    from a generator at the right stream position equal the rows of one
+    big block draw. v2 draws, per sweep seed, ``z`` (all N·M normals),
+    then ``u`` (N·M uniforms), then ``eps`` (N·M normals) from one
+    SeedSequence-keyed generator — three cursors into one stream. We
+    keep three positioned generators per seed (``z`` at the start;
+    ``u``'s start state reached by drawing-and-discarding the z pass
+    chunk-wise; ``eps``'s by discarding the u pass) and advance them in
+    lockstep as ``chunks()`` walks the device axis. Positioning costs
+    one extra draw pass per array with O(chunk) scratch — time ~2x the
+    dense pass, memory ~N/chunk times smaller.
+
+    Iterate with ``chunks()`` (in order, restartable), or call
+    ``materialize()`` for the dense dict (filled chunk-at-a-time: peak =
+    the final float32/int8 tensors + one chunk of float64 temps).
+    """
+
+    def __init__(self, seeds, n_devices: int, samples_per_device: int,
+                 light_accs, heavy_acc,
+                 chunk_devices: int = STREAM_CHUNK_DEVICES):
+        self.seeds = tuple(int(s) for s in seeds)
+        self.n_devices = int(n_devices)
+        self.samples_per_device = int(samples_per_device)
+        self.light_accs = np.broadcast_to(
+            np.asarray(light_accs, np.float64), (self.n_devices,)).copy()
+        self.heavy_acc = np.atleast_1d(
+            np.asarray(heavy_acc, np.float64)).copy()
+        self.chunk_devices = max(1, int(chunk_devices))
+
+    @property
+    def shape(self):
+        return (len(self.seeds), self.n_devices, self.samples_per_device)
+
+    @property
+    def n_profiles(self):
+        return len(self.heavy_acc)
+
+    def _positioned_rngs(self):
+        """Per-seed (rng_z, rng_u, rng_eps) at their v2 stream positions."""
+        n, m, g = self.n_devices, self.samples_per_device, self.chunk_devices
+        out = []
+        for seed in self.seeds:
+            rng_z = _seed_rng(seed)
+            rng_u = _seed_rng(seed)
+            for lo in range(0, n, g):          # discard the z pass
+                rng_u.standard_normal((min(g, n - lo), m))
+            rng_eps = np.random.default_rng(0)
+            rng_eps.bit_generator.state = rng_u.bit_generator.state
+            for lo in range(0, n, g):          # discard the u pass
+                rng_eps.random((min(g, n - lo), m))
+            out.append((rng_z, rng_u, rng_eps))
+        return out
+
+    def chunks(self):
+        """Yield ``(lo, hi, block)`` walking the device axis in order;
+        ``block`` holds ``confidence`` (S, hi-lo, M) float32,
+        ``correct_light`` (S, hi-lo, M) int8 and ``correct_heavy``
+        (S, hi-lo, M, P) int8 — bitwise equal to the dense v2 tensors'
+        ``[:, lo:hi]`` slices."""
+        n, m = self.n_devices, self.samples_per_device
+        s, g = len(self.seeds), self.chunk_devices
+        rngs = self._positioned_rngs()
+        for lo in range(0, n, g):
+            hi = min(lo + g, n)
+            w = hi - lo
+            z = np.empty((s, w, m))
+            u = np.empty((s, w, m))
+            eps = np.empty((s, w, m))
+            for i, (rng_z, rng_u, rng_eps) in enumerate(rngs):
+                z[i] = rng_z.standard_normal((w, m))
+                u[i] = rng_u.random((w, m))
+                eps[i] = rng_eps.standard_normal((w, m))
+            bz = BETA * z
+            buf = np.empty_like(bz)
+            a_l = _fit_alpha_batched(self.light_accs[None, lo:hi], bz,
+                                     buf=buf)
+            logits_l = a_l[..., None] - bz
+            correct_l = (u < _sigmoid(logits_l)).astype(np.int8)
+            cols = []
+            for acc in self.heavy_acc:
+                a_h = _fit_alpha_batched(acc, bz, buf=buf)
+                np.subtract(a_h[..., None], bz, out=buf)
+                cols.append((u < _sigmoid_into(buf)).astype(np.int8))
+            conf = _sigmoid(GAMMA * logits_l + CONF_NOISE * eps)
+            yield lo, hi, {
+                "confidence": conf.astype(np.float32),
+                "correct_light": correct_l,
+                "correct_heavy": np.stack(cols, axis=-1),
+            }
+
+    def materialize(self):
+        """Dense stream dict, filled chunk-at-a-time (peak extra memory =
+        one chunk of float64 temps — vs the full-size temps of
+        ``_stream_blocks``). Values are bitwise fixture-v2."""
+        s, n, m = self.shape
+        out = {
+            "confidence": np.empty((s, n, m), np.float32),
+            "correct_light": np.empty((s, n, m), np.int8),
+            "correct_heavy": np.empty((s, n, m, self.n_profiles), np.int8),
+        }
+        for lo, hi, blk in self.chunks():
+            for k, v in blk.items():
+                out[k][:, lo:hi] = v
+        return out
+
+
+def chunked_device_streams(seeds, n_devices: int, samples_per_device: int,
+                           light_accs, heavy_acc,
+                           chunk_devices: int = STREAM_CHUNK_DEVICES):
+    """Lazy chunked streams for fleet-scale sweeps.
+
+    Args as ``batched_device_streams`` plus ``chunk_devices`` (device-
+    axis chunk width). Returns a :class:`StreamChunks` — pass it
+    directly to ``jaxsim.run``/``run_sweep`` (they materialize it
+    chunk-at-a-time) or iterate ``chunks()`` yourself. Values are
+    bitwise identical to ``batched_device_streams`` at any chunk size
+    (fixture ``STREAM_FIXTURE_VERSION = 2``; pinned by
+    tests/test_scale.py)."""
+    return StreamChunks(seeds, n_devices, samples_per_device, light_accs,
+                        heavy_acc, chunk_devices)
+
+
 def device_streams(n_devices: int, samples_per_device: int, light_accs,
                    heavy_acc, seed: int):
     """Stacked sample streams for the vectorized simulator, one seed.

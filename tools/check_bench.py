@@ -19,7 +19,16 @@ Hard failures (exit 1):
     wall at B=8 over B=1, likewise ``ratio_b64``) exceeds
     ``LANE_RATIO_LIMIT`` — the lane-aligned engine's batching guarantee
     (the ~10% B=1-vs-B=8 target plus timer-noise headroom; the old
-    vmapped engine sat at ~2.3x/4x and must never come back).
+    vmapped engine sat at ~2.3x/4x and must never come back);
+
+  * ``fig_scale``'s ``wall_per_event_ratio`` (per-event wall growth
+    from the reference fleet size to the top one, normalized by the
+    sqrt(N) allowance of the segmented frontier's G ~ sqrt(N) slice)
+    exceeds ``SCALE_WPE_LIMIT`` — the sublinear-per-event guarantee
+    broke (a flat O(N) argmin sneaking back shows up as ~10 here at
+    100k vs 1k; healthy runs sit at ~0.3-1.0), or its
+    ``max_compiles_per_n`` exceeds 1 — some fleet size recompiled
+    beyond its one event-core executable.
 
 Wall time is reported but only warned about by default (CI machines are
 too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
@@ -40,6 +49,10 @@ import sys
 # must match benchmarks.run.BENCH_SCHEMA (pinned by tests/test_system.py)
 BENCH_SCHEMA = 2
 LANE_RATIO_LIMIT = 1.25
+# fig_scale: sqrt(N)-normalized per-event wall growth (see
+# benchmarks/fig_scale.py) may be at most this (measured ~0.3 quick,
+# ~1.0 full; a flat-frontier regression at 100k devices lands ~10)
+SCALE_WPE_LIMIT = 3.0
 
 
 def main() -> int:
@@ -113,6 +126,25 @@ def main() -> int:
                     f"{fig}: {rk} {n[rk]:.3f} > {LANE_RATIO_LIMIT} "
                     f"(lane-aligned batching guarantee broken: "
                     f"wall-per-point must not grow with B)")
+        if "wall_per_event_ratio" in b:
+            if n.get("wall_per_event_ratio") is None:
+                failures.append(
+                    f"{fig}: wall_per_event_ratio missing from new run")
+            elif n["wall_per_event_ratio"] > SCALE_WPE_LIMIT:
+                failures.append(
+                    f"{fig}: wall_per_event_ratio "
+                    f"{n['wall_per_event_ratio']:.3f} > {SCALE_WPE_LIMIT} "
+                    f"(per-event cost grew faster than the sqrt(N) "
+                    f"allowance: segmented frontier guarantee broken)")
+        if "max_compiles_per_n" in b:
+            if n.get("max_compiles_per_n") is None:
+                failures.append(
+                    f"{fig}: max_compiles_per_n missing from new run")
+            elif n["max_compiles_per_n"] > 1:
+                failures.append(
+                    f"{fig}: max_compiles_per_n "
+                    f"{n['max_compiles_per_n']} > 1 (a fleet size "
+                    f"recompiled beyond its one event-core executable)")
         if b.get("wall_s"):
             ratio = n["wall_s"] / b["wall_s"]
             line = (f"{fig}: wall {n['wall_s']:.3f}s vs baseline "

@@ -1,0 +1,173 @@
+"""Sim-vs-serving probe: the live serving engine vs its vectorized twin,
+plus the executable-sharing contract of the serving path.
+
+Two claims are measured and gated (``tools/check_bench.py``):
+
+* **The live path tracks the simulator.** One synthetic scenario per
+  environment (``steady`` and ``churn`` from ``repro.configs.scenarios``,
+  jittered per-device latencies, a server slow enough that SLOs bind) is
+  replayed through BOTH ``repro.serving.run_cascade`` (real engine:
+  bounded queue, ladder buckets, in-flight slots, scheduler loop) and
+  ``repro.sim.jaxsim.run``, for static and multitasc++. The worst-row
+  deltas land in EXTRA_JSON (``serving_d_sr`` / ``serving_d_thr_rel`` /
+  ``serving_d_fwd``, gated against ``repro.serving.replay.SERVING_TOL``
+  magnitudes) and conservation is exact (``serving_d_completed`` gated
+  ``== 0``): both sides must complete the same sample set even under
+  churn.
+
+* **Serving compiles are bounded by distinct buckets, not object
+  count.** With real (tiny) models: the serving phase from a cold
+  executable cache — every ladder bucket of the server profile warmed,
+  a fleet of clients driven through the live cascade — may compile at
+  most ``serving_compile_budget`` executables (distinct server buckets
+  + the shared client bucket-1 forward; the seed engine's per-object
+  ``@jax.jit`` paid one compile per client/served-model instance).
+  Then a LARGER fleet + fresh engine over the same models runs again:
+  ``serving_extra_client_compiles`` is gated ``== 0`` — adding clients
+  must never compile.
+
+A host-loop probe: the differential rows each cost one ``jaxsim.run``
+point (deterministic ``n_points``); the live loop itself is pure-numpy
+host code and compiles nothing.
+"""
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.configs.cascade_tiers import (BATCH_LADDER, DEVICE_PROFILES,
+                                         ServerProfile, SERVER_PROFILES)
+from repro.configs import scenarios
+from repro.models.model import build_model
+from repro.serving import executables
+from repro.serving.cascade import run_cascade
+from repro.serving.client import DeviceClient
+from repro.serving.engine import ServedModel, ServerEngine
+from repro.serving.replay import serving_vs_sim
+from repro.sim import jaxsim, synthetic
+from repro.sim.events import make_scheduler
+
+# differential scenario: small fleet, binding SLOs (server slow enough
+# to queue), one seed per environment — the live loop is host Python
+N, SAMPLES, SEED = 10, 150, 11
+SLO, BASE_LAT = 0.16, 0.06
+LIGHT_ACC, HEAVY_ACCS = 0.70, (0.90, 0.94)
+DIFF_SERVERS = (ServerProfile("diff-fast", "synthetic", 0.90, 0.045, 16),
+                ServerProfile("diff-heavy", "synthetic", 0.94, 0.070, 16))
+SCHEDULERS = ("static", "multitasc++")
+SCENARIOS = ("steady", "churn")
+
+# compile probe fleet sizes: the second, larger fleet must add zero
+CLIENTS_COLD, CLIENTS_WARM = 5, 8
+PROBE_SAMPLES = 6
+
+# populated by run(); benchmarks/run.py merges it into the bench json
+EXTRA_JSON = {}
+
+
+def _differential_rows():
+    rows, worst = [], {"d_sr": 0.0, "d_thr_rel": 0.0, "d_fwd": 0.0,
+                       "d_completed": 0}
+    rng = np.random.default_rng(2)
+    lat = (BASE_LAT * rng.uniform(0.9, 1.1, N)).astype(np.float32)
+    slo = np.full(N, SLO, np.float32)
+    streams = synthetic.device_streams(N, SAMPLES, LIGHT_ACC,
+                                       list(HEAVY_ACCS), SEED)
+    for scn_name in SCENARIOS:
+        r = scenarios.realize(scenarios.SCENARIOS[scn_name], [SEED], N,
+                              SAMPLES, lat)
+        st = dict(streams)
+        if r["arrive"] is not None:
+            st["arrive"] = r["arrive"][0]
+        for sched in SCHEDULERS:
+            t0 = time.perf_counter()
+            live, sim, d = serving_vs_sim(
+                sched, st, lat, slo, DIFF_SERVERS,
+                join_t=r["join_t"][0], leave_t=r["leave_t"][0])
+            wall = time.perf_counter() - t0
+            for k in worst:
+                worst[k] = max(worst[k], d[k])
+            rows.append(Row(
+                f"fig_serving/{scn_name}/{sched}",
+                wall / max(live.completed, 1) * 1e6,
+                f"sr_live={live.sr:.2f};sr_sim={float(sim['sr']):.2f};"
+                f"d_sr={d['d_sr']:.3f};d_thr_rel={d['d_thr_rel']:.4f};"
+                f"d_fwd={d['d_fwd']:.4f};completed={live.completed}"))
+            print(f"# fig_serving {scn_name}/{sched}: "
+                  f"d_sr={d['d_sr']:.3f} d_thr_rel={d['d_thr_rel']:.4f} "
+                  f"d_completed={d['d_completed']}", file=sys.stderr)
+    EXTRA_JSON["serving_d_sr"] = round(worst["d_sr"], 4)
+    EXTRA_JSON["serving_d_thr_rel"] = round(worst["d_thr_rel"], 4)
+    EXTRA_JSON["serving_d_fwd"] = round(worst["d_fwd"], 4)
+    EXTRA_JSON["serving_d_completed"] = int(worst["d_completed"])
+    return rows
+
+
+def _fleet(n, light, lp, hm, hp, lcfg):
+    rng = np.random.default_rng(3)
+    clients = [DeviceClient(i, light, lp, DEVICE_PROFILES["low"],
+                            slo=0.15, window=1.5, threshold=0.6)
+               for i in range(n)]
+    # two served models SHARING one architecture/params: the switching
+    # ladder must also share per-bucket executables
+    engine = ServerEngine([
+        ServedModel("fast", hm, hp, SERVER_PROFILES["inceptionv3"]),
+        ServedModel("heavy", hm, hp, SERVER_PROFILES["efficientnetb3"]),
+    ])
+    datasets = [[np.asarray(rng.integers(0, lcfg.vocab_size, 8),
+                            np.int32) for _ in range(PROBE_SAMPLES)]
+                for _ in range(n)]
+    sched = make_scheduler("static", n,
+                           server_profile=SERVER_PROFILES["inceptionv3"],
+                           slo=0.15, static_threshold=0.6)
+    return clients, engine, sched, datasets
+
+
+def _compile_rows():
+    lcfg = get_config("tier-low")
+    hcfg = get_config("tier-server-fast")
+    light, hm = build_model(lcfg), build_model(hcfg)
+    lp, hp = light.init(jax.random.key(0)), hm.init(jax.random.key(1))
+
+    executables.clear_cache()
+    before = jaxsim.stats_snapshot()["backend_compiles"]
+    # warm every ladder bucket the served profiles can dispatch, so the
+    # budget is deterministic and the warm-fleet run below has no
+    # stochastic first-touch compiles left
+    max_b = max(SERVER_PROFILES["inceptionv3"].max_batch,
+                SERVER_PROFILES["efficientnetb3"].max_batch)
+    buckets = [b for b in BATCH_LADDER if b <= max_b]
+    for b in buckets:
+        fn = executables.classify_fn(hm, hp, b)
+        fn(hp, np.zeros((b, 8), np.int32))
+    clients, engine, sched, datasets = _fleet(CLIENTS_COLD, light, lp,
+                                              hm, hp, lcfg)
+    run_cascade(clients, engine, sched, datasets)
+    cold = jaxsim.stats_snapshot()["backend_compiles"] - before
+    budget = len(buckets) + 1          # + the shared client b=1 forward
+
+    before = jaxsim.stats_snapshot()["backend_compiles"]
+    clients, engine, sched, datasets = _fleet(CLIENTS_WARM, light, lp,
+                                              hm, hp, lcfg)
+    run_cascade(clients, engine, sched, datasets)
+    extra = jaxsim.stats_snapshot()["backend_compiles"] - before
+
+    stats = executables.cache_stats()
+    EXTRA_JSON["serving_compiles"] = int(cold)
+    EXTRA_JSON["serving_compile_budget"] = int(budget)
+    EXTRA_JSON["serving_extra_client_compiles"] = int(extra)
+    print(f"# fig_serving compile probe: cold={cold} budget={budget} "
+          f"extra_clients={extra} cache={stats}", file=sys.stderr)
+    return [Row("fig_serving/compile_probe", 0.0,
+                f"serving_compiles={cold};budget={budget};"
+                f"extra_client_compiles={extra};"
+                f"executables={stats['executables']};"
+                f"hits={stats['hits']}")]
+
+
+def run():
+    EXTRA_JSON.clear()
+    return _differential_rows() + _compile_rows()

@@ -75,7 +75,8 @@ def main() -> None:
                             fig11_heterogeneous, fig11_lanes,
                             fig11_scaleout, fig15_transformers,
                             fig17_switching, fig19_intermittent,
-                            fig_churn, fig_scale, kernels_bench)
+                            fig_churn, fig_scale, fig_serving,
+                            kernels_bench)
     from repro.sim import jaxsim
     modules = {
         "fig4": fig4_homogeneous,
@@ -89,6 +90,7 @@ def main() -> None:
         "fig19": fig19_intermittent,
         "fig_churn": fig_churn,
         "fig_scale": fig_scale,
+        "fig_serving": fig_serving,
         "ablation": ablation_components,
         "kernels": kernels_bench,
     }

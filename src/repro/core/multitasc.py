@@ -22,6 +22,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +86,8 @@ class MultiTASC:
 
     def report(self, device_id: int, sr_update: float) -> float:
         # MultiTASC ignores SR reports; updates happen on its own window
-        return float(self.state["thresh"][device_id])
+        # (host transfer, not an eager per-fleet-size dynamic_slice)
+        return float(np.asarray(self.state["thresh"])[device_id])
 
     def on_window(self, active=None) -> None:
         self.state = update(self.state, self._recent_batch, self.b_opt,

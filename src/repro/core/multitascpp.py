@@ -22,6 +22,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_A = 0.005        # paper Sec. V-B: scaling variable a
 DEFAULT_WINDOW = 1.5     # paper Sec. V-B: reporting window T (s)
@@ -114,7 +115,8 @@ class MultiTASCPP:
         new = update(self.state, sr, self.cfg, sr_target=self.sr_targets,
                      n_active=jnp.sum(self.active), active=mask & self.active)
         self.state = new
-        return float(new["thresh"][device_id])
+        # host transfer, not an eager per-fleet-size dynamic_slice
+        return float(np.asarray(new["thresh"])[device_id])
 
     def on_server_batch(self, batch_size: int) -> None:  # interface parity
         pass

@@ -6,15 +6,19 @@ the whole run.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+import numpy as np
 
 
 class Static:
     name = "static"
 
     def __init__(self, n_devices: int, threshold: float):
-        self.state = {"thresh": jnp.full((n_devices,), threshold,
-                                         jnp.float32)}
+        # host arrays throughout: this wrapper only serves the host
+        # loops (events sim + live serving), and eager jnp.full /
+        # thresh[i] each compiled a throwaway executable PER FLEET SIZE
+        # (the serving compile gate caught this on the live path)
+        self.state = {"thresh": np.full((n_devices,), threshold,
+                                        np.float32)}
 
     def thresholds(self):
         return self.state["thresh"]

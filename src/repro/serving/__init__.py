@@ -1,8 +1,14 @@
-"""Live cascade serving: queue, dynamic batching, engine, clients."""
+"""Live cascade serving: queue, dynamic batching, engine, clients,
+process-wide executable cache, and the sim-vs-serving replay harness."""
 from repro.serving.cascade import CascadeResult, run_cascade
 from repro.serving.client import DeviceClient
 from repro.serving.engine import ServedModel, ServerEngine
+from repro.serving.executables import cache_stats, clear_cache
 from repro.serving.queue import Request, RequestQueue
+from repro.serving.replay import (SERVING_TOL, StreamClient, replay_cascade,
+                                  serving_vs_sim)
 
 __all__ = ["run_cascade", "CascadeResult", "DeviceClient", "ServerEngine",
-           "ServedModel", "Request", "RequestQueue"]
+           "ServedModel", "Request", "RequestQueue", "cache_stats",
+           "clear_cache", "SERVING_TOL", "StreamClient", "replay_cascade",
+           "serving_vs_sim"]

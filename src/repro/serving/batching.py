@@ -11,21 +11,26 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.cascade_tiers import BATCH_LADDER
 
 
 def pick_bucket(queue_len: int, max_batch: int,
                 ladder: Sequence[int] = BATCH_LADDER) -> int:
-    """Largest ladder batch <= min(queue_len, max_batch); 0 if queue empty."""
-    if queue_len <= 0:
+    """Largest ladder batch <= min(queue_len, max_batch); 0 if nothing
+    can be dispatched.
+
+    ``max_batch`` is respected *exactly*: when no ladder entry fits under
+    ``min(queue_len, max_batch)`` — e.g. ``max_batch=0``, or a ladder
+    whose smallest entry exceeds the per-model cap — the answer is 0
+    (do not dispatch), never a batch above the cap. The ladder need not
+    be sorted.
+    """
+    cap = min(queue_len, max_batch)
+    if cap <= 0:
         return 0
-    b = 1
-    for x in ladder:
-        if x <= min(queue_len, max_batch):
-            b = x
-    return b
+    feasible = [x for x in ladder if 0 < x <= cap]
+    return max(feasible) if feasible else 0
 
 
 def pad_batch(samples: list, bucket: int):

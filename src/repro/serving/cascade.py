@@ -1,11 +1,42 @@
 """End-to-end live cascade orchestrator.
 
 Wires N DeviceClients (real light-model logits), the ServerEngine (real
-heavy-model logits, dynamic batching, model switching) and a scheduler
-(MultiTASC++/MultiTASC/Static) into the closed loop of Fig. 2/3, driven by
-a deterministic virtual clock (event heap). This is the live-model
-counterpart of repro.sim.events: same queueing semantics, but confidences
-come from actual forward passes instead of the calibrated synthetic model.
+heavy-model logits, continuous dynamic batching, model switching) and a
+scheduler (MultiTASC++/MultiTASC/Static) into the closed loop of
+Fig. 2/3, driven by a deterministic virtual clock (event heap). This is
+the live-model counterpart of ``repro.sim.events``: same queueing
+semantics and the same event taxonomy (EV_JOIN < EV_LEAVE < EV_DEV <
+EV_SRV < EV_WINDOW at equal timestamps), but confidences come from
+actual forward passes instead of the calibrated synthetic model — and
+``repro.sim.jaxsim`` is its vectorized digital twin, pinned by the
+sim-vs-serving differential (tests/test_serving_differential.py).
+
+Differences from the seed loop, all bugfixes or engine features:
+
+* busy/capacity tracking lives in ``ServerEngine`` (multiple in-flight
+  batches, per-batch completion events) — the caller-side
+  ``server_busy`` flag is gone, and with it the gating bug where any
+  second dispatch site could double-book the server;
+* dispatch happens after the whole same-instant completion cluster has
+  enqueued (a fleet of identical-latency devices forwarding at one
+  instant forms ONE batch, as in both simulators) and *drains*: as many
+  batches as the engine has free slots;
+* throughput divides by the **last completion time**, not the last
+  event time — a trailing post-drain window boundary no longer
+  inflates the denominator;
+* empty devices report SR 100 / accuracy 1.0 (the simulators'
+  convention), not 0;
+* device churn (``join_t``/``leave_t``) and non-stationary arrivals
+  (``arrive``) replay the scenario semantics of
+  ``repro.configs.scenarios``: a join delays the first sample, a leave
+  lazily drops the unprocessed stream at the first would-be completion
+  past ``leave_t`` (in-flight server requests still complete), sample
+  ``j`` starts at ``max(previous finish, arrive[j])``;
+* a bounded engine queue sheds under backpressure: the dropped request
+  completes with the *device-local* prediction it already computed
+  (admission-control fallback), the drop is counted per device and
+  surfaced to the scheduler via ``scheduler.on_queue_drop(device_id)``
+  when the scheduler defines it.
 """
 from __future__ import annotations
 
@@ -19,133 +50,224 @@ from repro.core import switching
 from repro.core.multitasc import MultiTASC
 from repro.serving.client import DeviceClient
 from repro.serving.engine import Request, ServerEngine
+from repro.sim.events import EV_DEV, EV_JOIN, EV_LEAVE, EV_SRV, EV_WINDOW
 
 
 @dataclasses.dataclass
 class CascadeResult:
-    sr: float
-    accuracy: float
-    throughput: float
+    sr: float                      # overall SLO satisfaction rate [0,100]
+    accuracy: float                # mean per-device accuracy (NaN w/o labels)
+    throughput: float              # completed samples / last completion (s)
     forwarded_frac: float
     per_device_sr: np.ndarray
+    per_device_acc: np.ndarray
     timeline: Dict[str, list]
     switches: int
+    completed: int                 # samples that finished (local or server)
+    dropped: int                   # requests shed/rejected by the queue
+    queue_peak: int                # realized queue high-water mark
+    last_completion_t: float
 
 
 def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
                 scheduler, datasets, labels=None, *, window: float = 1.5,
                 model_switching: bool = False, tier_ids=None,
-                c_upper=None, max_time: float = 3600.0) -> CascadeResult:
-    """datasets: per-device list of (S,) token arrays (one per sample).
+                c_lower: float = switching.DEFAULT_C_LOWER, c_upper=None,
+                join_t=None, leave_t=None, arrive=None,
+                max_time: float = 3600.0) -> CascadeResult:
+    """datasets: per-device list of samples (e.g. (S,) token arrays).
 
     labels: optional per-device list of int labels — when given, accuracy
-    is measured against them; otherwise agreement-with-heavy is reported.
+    is measured against them; otherwise accuracy is NaN.
+    join_t / leave_t: optional (n,) churn schedule in seconds (fleet
+    membership on [join_t, leave_t), scenario semantics above).
+    arrive: optional per-device (S,) cumulative arrival times in seconds
+    (list of arrays or (n, S) array); None = saturated streams.
     """
     n = len(clients)
     tier_ids = np.zeros(n, np.int32) if tier_ids is None else np.asarray(tier_ids)
     n_tiers = int(tier_ids.max()) + 1
     if c_upper is None:
         c_upper = np.full(n_tiers, 0.8)
+    join_t = np.zeros(n) if join_t is None else np.asarray(join_t, np.float64)
+    leave_t = (np.full(n, np.inf) if leave_t is None
+               else np.asarray(leave_t, np.float64))
+
+    def arrival(i: int, j: int) -> float:
+        return 0.0 if arrive is None else float(arrive[i][j])
 
     heap, seq = [], 0
 
     def push(t, kind, payload=None):
         nonlocal seq
-        heapq.heappush(heap, (t, seq, kind, payload))
+        heapq.heappush(heap, (t, kind, seq, payload))
         seq += 1
 
-    for c in clients:
-        push(c.profile.latency, "dev", c.device_id)
-    push(window, "window", None)
+    joined = join_t <= 0.0
+    departed = np.zeros(n, bool)
+    for i, c in enumerate(clients):
+        if joined[i]:
+            push(max(join_t[i], arrival(i, 0)) + c.profile.latency,
+                 EV_DEV, i)
+        else:
+            push(join_t[i], EV_JOIN, i)
+        if np.isfinite(leave_t[i]):
+            push(leave_t[i], EV_LEAVE, i)
+    push(window, EV_WINDOW, None)
 
     cursor = np.zeros(n, int)
     met = np.zeros(n, int)
     total = np.zeros(n, int)
     correct = np.zeros(n, int)
-    fwd_count = 0
-    server_busy = False
+    win_met = np.zeros(n, int)
+    win_total = np.zeros(n, int)
+    fwd_count = np.zeros(n, int)
+    drop_count = np.zeros(n, int)
+    completed = 0
     switches = 0
-    last_t = 0.0
-    timeline = {"t": [], "thresholds": [], "model": []}
+    last_done_t = 0.0
+    timeline = {"t": [], "thresholds": [], "model": [], "sr": [],
+                "active": [], "forwarded": []}
+    win_sr_last = np.full(n, 100.0)
 
-    def complete(i, latency, pred, label):
-        nonlocal last_t
+    def complete(i, latency, pred, label, t):
+        nonlocal last_done_t, completed
         clients[i].record_completion(latency)
-        met[i] += latency <= clients[i].slo
+        ok = latency <= clients[i].slo
+        met[i] += ok
+        win_met[i] += ok
         total[i] += 1
+        win_total[i] += 1
+        completed += 1
+        last_done_t = max(last_done_t, t)
         if label is not None:
             correct[i] += int(pred == label)
 
-    def try_batch(t):
-        nonlocal server_busy
-        if server_busy:
+    def drop(req: Request, t):
+        """Backpressure fallback: the queue's victim completes with the
+        local prediction its device already computed."""
+        j, label, local_pred = req.payload
+        drop_count[req.device_id] += 1
+        complete(req.device_id, t - req.start_time, local_pred, label, t)
+        hook = getattr(scheduler, "on_queue_drop", None)
+        if hook is not None:
+            hook(req.device_id)
+
+    def dispatch(t):
+        """Drain: launch batches while the engine has free slots and the
+        ladder admits one (the engine refuses past its capacity)."""
+        while True:
+            out = engine.step(t)
+            if out is None:
+                return
+            scheduler.on_server_batch(len(out["requests"]))
+            push(out["finish"], EV_SRV, out)
+
+    def on_device(t, i):
+        if cursor[i] >= len(datasets[i]):
             return
-        out = engine.step(t)
-        if out is None:
+        if departed[i]:
+            # lazy departure (scenario semantics): the would-be
+            # completion past leave_t drops the rest of the stream
+            cursor[i] = len(datasets[i])
             return
-        scheduler.on_server_batch(len(out["requests"]))
-        server_busy = True
-        push(out["finish"], "srv", out)
+        j = cursor[i]
+        cursor[i] += 1
+        tokens = datasets[i][j]
+        conf, pred, do_fwd = clients[i].run_local(tokens)
+        label = labels[i][j] if labels is not None else None
+        if do_fwd:
+            fwd_count[i] += 1
+            victim = engine.submit(Request(
+                i, tokens, t, t - clients[i].profile.latency,
+                payload=(j, label, pred)))
+            if victim is not None:
+                drop(victim, t)
+        else:
+            complete(i, clients[i].profile.latency, pred, label, t)
+        if cursor[i] < len(datasets[i]):
+            push(max(t, arrival(i, cursor[i])) + clients[i].profile.latency,
+                 EV_DEV, i)
+
+    def on_server(t, out):
+        engine.complete(out)
+        for r, pred in zip(out["requests"], out["pred"]):
+            j, label, _local = r.payload
+            complete(r.device_id, t - r.start_time, int(pred), label, t)
+        dispatch(t)
+
+    def on_window(t):
+        nonlocal switches
+        active = joined & ~departed
+        if hasattr(scheduler, "set_active"):
+            scheduler.set_active(active)
+        for i, c in enumerate(clients):
+            if not active[i]:
+                continue
+            sr = 100.0 if win_total[i] == 0 else \
+                100.0 * win_met[i] / win_total[i]
+            win_sr_last[i] = sr
+            win_met[i] = 0
+            win_total[i] = 0
+            c.threshold = scheduler.report(i, sr)
+        if isinstance(scheduler, MultiTASC):
+            scheduler.on_window(active=active)
+            th = np.asarray(scheduler.thresholds())
+            for i, c in enumerate(clients):
+                c.threshold = float(th[i])
+        if model_switching:
+            th = np.array([c.threshold for c in clients])
+            s = int(switching.decide(th, tier_ids, n_tiers, c_lower,
+                                     c_upper, active=active))
+            if s != 0 and engine.switch(s):
+                switches += 1
+        timeline["t"].append(t)
+        timeline["thresholds"].append([c.threshold for c in clients])
+        timeline["model"].append(engine.active.name)
+        timeline["sr"].append(win_sr_last.copy())
+        timeline["active"].append(float(active.mean()))
+        timeline["forwarded"].append(int(fwd_count.sum()))
+        if any(cursor[i] < len(datasets[i]) for i in range(n)) \
+                or len(engine.queue) or engine.in_flight:
+            push(t + window, EV_WINDOW, None)
 
     while heap:
-        t, _, kind, payload = heapq.heappop(heap)
+        t, kind, _, payload = heapq.heappop(heap)
         if t > max_time:
             break
-        last_t = max(last_t, t)
-        if kind == "dev":
-            i = payload
-            if cursor[i] >= len(datasets[i]):
-                continue
-            j = cursor[i]
-            cursor[i] += 1
-            tokens = datasets[i][j]
-            conf, pred, do_fwd = clients[i].run_local(tokens)
-            label = labels[i][j] if labels is not None else None
-            if do_fwd:
-                fwd_count += 1
-                engine.submit(Request(i, tokens, t, t - clients[i].profile.latency,
-                                      payload=(j, label)))
-                try_batch(t)
-            else:
-                complete(i, clients[i].profile.latency, pred, label)
-            if cursor[i] < len(datasets[i]):
-                push(t + clients[i].profile.latency, "dev", i)
-        elif kind == "srv":
-            server_busy = False
-            for r, pred in zip(payload["requests"], payload["pred"]):
-                j, label = r.payload
-                complete(r.device_id, t - r.start_time, int(pred), label)
-            try_batch(t)
-        elif kind == "window":
-            for i, c in enumerate(clients):
-                sr = c.maybe_report(t)
-                if sr is not None:
-                    c.threshold = scheduler.report(i, sr)
-            if isinstance(scheduler, MultiTASC):
-                scheduler.on_window()
-                th = np.asarray(scheduler.thresholds())
-                for i, c in enumerate(clients):
-                    c.threshold = float(th[i])
-            if model_switching:
-                th = np.array([c.threshold for c in clients])
-                s = int(switching.decide(th, tier_ids, n_tiers,
-                                         switching.DEFAULT_C_LOWER, c_upper))
-                if s != 0 and engine.switch(s):
-                    switches += 1
-            timeline["t"].append(t)
-            timeline["thresholds"].append([c.threshold for c in clients])
-            timeline["model"].append(engine.active.name)
-            if any(cursor[i] < len(datasets[i]) for i in range(n)) \
-                    or len(engine.queue) or server_busy:
-                push(t + window, "window", None)
+        if kind == EV_JOIN:
+            joined[payload] = True
+            if cursor[payload] < len(datasets[payload]):
+                push(max(t, arrival(payload, cursor[payload]))
+                     + clients[payload].profile.latency, EV_DEV, payload)
+        elif kind == EV_LEAVE:
+            departed[payload] = True
+        elif kind == EV_DEV:
+            on_device(t, payload)
+            # launch only after the whole same-instant completion
+            # cluster has enqueued: simultaneous forwards form one batch
+            if not heap or heap[0][0] != t or heap[0][1] != EV_DEV:
+                dispatch(t)
+        elif kind == EV_SRV:
+            on_server(t, payload)
+        elif kind == EV_WINDOW:
+            on_window(t)
 
-    tot = np.maximum(total, 1)
+    per_sr = np.where(total > 0, 100.0 * met / np.maximum(total, 1), 100.0)
+    have_labels = labels is not None
+    per_acc = np.where(total > 0, correct / np.maximum(total, 1), 1.0)
     return CascadeResult(
         sr=float(100.0 * met.sum() / max(total.sum(), 1)),
-        accuracy=float((correct / tot).mean()) if labels is not None else float("nan"),
-        throughput=float(total.sum() / max(last_t, 1e-9)),
-        forwarded_frac=float(fwd_count / max(total.sum(), 1)),
-        per_device_sr=100.0 * met / tot,
+        accuracy=float(per_acc.mean()) if have_labels else float("nan"),
+        throughput=float(total.sum() / max(last_done_t, 1e-9)),
+        forwarded_frac=float(fwd_count.sum() / max(total.sum(), 1)),
+        per_device_sr=per_sr,
+        per_device_acc=(per_acc if have_labels
+                        else np.full(n, np.nan)),
         timeline=timeline,
         switches=switches,
+        completed=int(completed),
+        dropped=int(drop_count.sum()),
+        queue_peak=int(engine.queue.peak),
+        last_completion_t=float(last_done_t),
     )

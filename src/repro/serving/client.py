@@ -3,19 +3,24 @@
 Runs the tier's light model on each sample, computes BvSB confidence, and
 applies Eq. 3 against the scheduler-controlled threshold. Timing uses the
 tier's calibrated latency profile (virtual clock) while logits are real.
+
+The single-sample classify forward comes from the process-wide
+executable cache (``repro.serving.executables``), keyed by architecture
+and parameter shapes — N identical clients share ONE compiled
+executable instead of compiling per instance (the seed's per-object
+``@jax.jit`` compiled the same function N times).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.cascade_tiers import DeviceProfile
-from repro.core import decision
 from repro.core.slo import WindowedSLOTracker
 from repro.models.model import Model
+from repro.serving.executables import classify_fn
 
 
 @dataclasses.dataclass
@@ -31,22 +36,18 @@ class DeviceClient:
 
     def __post_init__(self):
         self.tracker = WindowedSLOTracker(self.slo, self.window)
-        metric = decision.METRICS[self.confidence]
-
-        @jax.jit
-        def infer(params, tokens):
-            logits, _, _ = self.model.forward(params, {"tokens": tokens})
-            last = logits[:, -1, :]
-            conf, pred = metric(last)
-            return conf[0], pred[0]
-
-        self._infer = infer
+        self._infer = classify_fn(self.model, self.params, 1,
+                                  self.confidence)
 
     def run_local(self, tokens) -> tuple:
         """Returns (confidence, prediction, forward?)."""
-        conf, pred = self._infer(self.params, tokens[None])
-        fwd = bool(conf < self.threshold)
-        return float(conf), int(pred), fwd
+        # host-side batch-of-1 assembly: np + jit argument transfer are
+        # compile-free (an eager jnp expand/index would compile a
+        # throwaway executable per client call site)
+        conf, pred = self._infer(self.params, np.asarray(tokens)[None])
+        conf, pred = float(np.asarray(conf)[0]), int(np.asarray(pred)[0])
+        fwd = conf < self.threshold
+        return conf, pred, fwd
 
     def record_completion(self, latency: float) -> None:
         self.tracker.record(latency)

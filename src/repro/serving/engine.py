@@ -1,51 +1,91 @@
-"""Server engine: batched inference over the shared heavy model(s).
+"""Server engine: continuous-batching inference over the shared heavy
+model(s).
 
-Hosts one or more server models (paper Sec. IV-E model switching keeps all
-candidates resident; switching changes which compiled executable is
+Hosts one or more server models (paper Sec. IV-E model switching keeps
+all candidates resident; switching changes which compiled executable is
 dispatched — no weight reload). Pulls ladder-bucketed batches from the
 request queue, runs the classification forward (next-token logits of the
 last position as the label distribution), and returns per-sample
 (prediction, confidence) through the result-distribution callback.
 
+Engine states and capacity
+--------------------------
+The engine owns its busy/capacity tracking: up to ``max_in_flight``
+dispatched batches may be outstanding at once (execution slots — streams
+or replicas of the serving accelerator; the paper's single-T4 system is
+``max_in_flight=1``). ``step(now)`` dispatches at most one batch and
+returns its completion record — the caller schedules the record's
+``finish`` time and hands it back through ``complete`` when that instant
+is reached, freeing the slot. ``step`` refuses to dispatch while every
+slot is occupied, so a buggy caller invoking it mid-batch cannot
+oversubscribe the server (the seed engine relied on a caller-side
+``server_busy`` flag for this — the gating bug this layout removes).
+
+Executables
+-----------
+The classify forward comes from the process-wide cache
+(``repro.serving.executables``), keyed by (architecture, param shapes,
+bucket, metric): N engines / served models of one architecture share
+per-bucket executables, so total compiles are bounded by the distinct
+buckets actually dispatched — never by object count. Host-side batch
+assembly is pure numpy (no throwaway eager-op compiles on the dispatch
+path).
+
 Latency accounting: on real TPUs this is wall-clock; on the CPU container
 the engine uses the calibrated ServerProfile latency curve for *virtual*
 time while still computing real logits — so the control loop is exercised
 against real model outputs with reproducible timing.
+
+A ``ServedModel`` may instead carry an ``oracle`` callable
+(``(requests) -> (conf, pred) arrays``) and no model: the sim-vs-serving
+differential (``repro.serving.replay``) replays calibrated synthetic
+streams through the *same* queue/bucket/capacity machinery, with only the
+logits replaced.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import itertools
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.cascade_tiers import BATCH_LADDER, ServerProfile
-from repro.core import decision
-from repro.models.model import Model, build_model
-from repro.serving.batching import pad_batch, pick_bucket
+from repro.configs.cascade_tiers import ServerProfile
+from repro.models.model import Model
+from repro.serving.batching import pick_bucket
+from repro.serving.executables import classify_fn
 from repro.serving.queue import Request, RequestQueue
 
 
 @dataclasses.dataclass
 class ServedModel:
     name: str
-    model: Model
+    model: Optional[Model]
     params: Any
     profile: ServerProfile
+    # replay mode: host-side (requests) -> (conf (n,), pred (n,)) oracle
+    # standing in for the model forward (None = real model)
+    oracle: Optional[Callable] = None
 
 
 class ServerEngine:
-    """Batched cascade server with model switching."""
+    """Batched cascade server: bounded queue, in-flight slot tracking,
+    ladder-bucket dispatch, model switching."""
 
-    def __init__(self, served: Sequence[ServedModel], confidence="bvsb"):
+    def __init__(self, served: Sequence[ServedModel], confidence="bvsb",
+                 *, max_in_flight: int = 1,
+                 queue: Optional[RequestQueue] = None):
+        if max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
         self.served = list(served)
         self.active_idx = 0
-        self.queue = RequestQueue()
-        self.confidence = decision.METRICS[confidence]
-        self._infer_cache: Dict = {}
+        self.queue = RequestQueue() if queue is None else queue
+        self.confidence = confidence
+        self.max_in_flight = int(max_in_flight)
+        self.in_flight = 0
         self.batch_history: List[int] = []
+        self._batch_ids = itertools.count()
+        self._open: set = set()
 
     # -- model switching ---------------------------------------------------
     @property
@@ -60,44 +100,64 @@ class ServerEngine:
         self.active_idx = new
         return changed
 
-    # -- inference ----------------------------------------------------------
-    def _infer_fn(self, idx: int, bucket: int):
-        key = (idx, bucket)
-        if key not in self._infer_cache:
-            sm = self.served[idx]
+    # -- admission ----------------------------------------------------------
+    def submit(self, req: Request) -> Optional[Request]:
+        """Enqueue; under a bounded queue returns the dropped request
+        (see ``RequestQueue.put``) for the caller's local fallback."""
+        return self.queue.put(req)
 
-            @jax.jit
-            def fn(params, tokens):
-                logits, _, _ = sm.model.forward(params, {"tokens": tokens})
-                last = logits[:, -1, :]
-                conf, pred = self.confidence(last)
-                return conf, pred
-
-            self._infer_cache[key] = fn
-        return self._infer_cache[key]
-
-    def submit(self, req: Request) -> None:
-        self.queue.put(req)
+    # -- dispatch / completion ----------------------------------------------
+    @property
+    def slots_free(self) -> int:
+        return self.max_in_flight - self.in_flight
 
     def step(self, now: float) -> Optional[dict]:
-        """Serve one dynamic batch if the queue is non-empty.
+        """Dispatch one dynamic batch if a slot is free and the ladder
+        admits one; None otherwise (idle queue, or at capacity — the
+        engine itself refuses to oversubscribe its slots).
 
-        Returns {"requests", "conf", "pred", "latency", "finish"} or None.
+        Returns {"requests", "conf", "pred", "latency", "finish",
+        "model", "batch_id"}; the caller must hand the record back via
+        ``complete`` once its ``finish`` time is reached.
         """
+        if self.in_flight >= self.max_in_flight:
+            return None
         sm = self.active
         bucket = pick_bucket(len(self.queue), sm.profile.max_batch)
         if bucket == 0:
             return None
         reqs = self.queue.pop_batch(bucket)
         self.batch_history.append(len(reqs))
-        batch, n = pad_batch([r.sample for r in reqs], bucket)
-        conf, pred = self._infer_fn(self.active_idx, bucket)(sm.params, batch)
+        if sm.oracle is not None:
+            conf, pred = sm.oracle(reqs)
+            conf, pred = np.asarray(conf), np.asarray(pred)
+        else:
+            # host-side assembly: np.stack + jit argument transfer are
+            # compile-free, so dispatch costs exactly the per-bucket
+            # classify executable
+            batch = np.stack([np.asarray(r.sample) for r in reqs])
+            fn = classify_fn(sm.model, sm.params, bucket, self.confidence)
+            conf, pred = fn(sm.params, batch)
+            conf, pred = np.asarray(conf), np.asarray(pred)
         lat = sm.profile.batch_latency(bucket)
+        self.in_flight += 1
+        bid = next(self._batch_ids)
+        self._open.add(bid)
         return {
             "requests": reqs,
-            "conf": conf[:n],
-            "pred": pred[:n],
+            "conf": conf[:len(reqs)],
+            "pred": pred[:len(reqs)],
             "latency": lat,
             "finish": now + lat,
             "model": sm.name,
+            "batch_id": bid,
         }
+
+    def complete(self, out: dict) -> None:
+        """Mark a dispatched batch finished, freeing its slot. Each
+        record may complete exactly once."""
+        bid = out["batch_id"]
+        if bid not in self._open:
+            raise ValueError(f"batch {bid} is not in flight")
+        self._open.remove(bid)
+        self.in_flight -= 1

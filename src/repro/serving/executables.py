@@ -1,0 +1,88 @@
+"""Process-wide compiled-executable cache for the serving path.
+
+The live cascade runs the same classification forward — model trunk,
+last-position logits, confidence metric — from many call sites: every
+``DeviceClient`` (N per fleet), every ``ServedModel`` hosted by a
+``ServerEngine``, and every ladder bucket the dynamic batcher dispatches.
+Building a closure-captured ``@jax.jit`` per *object* (the seed engine's
+idiom) compiles the identical computation once per client and once per
+served model: a 100-device fleet paid 100 compiles of one executable.
+
+This cache keys the jitted classify function by what actually determines
+the compiled artifact:
+
+    (model architecture, parameter shape/dtype tree, ladder bucket,
+     confidence metric)
+
+so N clients sharing a light model hit one executable, the two served
+models of a switching ladder share per-bucket executables whenever their
+architectures match, and total serving compiles are bounded by the number
+of *distinct buckets actually dispatched* — not by client or model-
+instance count (gated by ``benchmarks/fig_serving.py``).
+
+The architecture key is the model's ``ArchConfig`` repr (a frozen
+dataclass: deterministic, value-complete); parameters enter the key by
+tree structure + leaf shapes/dtypes only — values are call arguments of
+the cached function, so switching parameter sets (e.g. a re-trained
+model of the same shape) reuses the executable.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+from repro.core import decision
+
+_CACHE: Dict[Tuple, Callable] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def _arch_key(model) -> str:
+    return repr(model.cfg)
+
+
+def _shape_key(params) -> Tuple:
+    leaves, treedef = jax.tree.flatten(params)
+    return treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves)
+
+
+def classify_fn(model, params, bucket: int,
+                metric: str = "bvsb") -> Callable:
+    """The jitted ``(params, tokens(bucket, L)) -> (conf, pred)`` forward
+    for this (architecture, param-shape, bucket, metric) — shared
+    process-wide across clients, engines and served models.
+    """
+    global _HITS, _MISSES
+    key = (_arch_key(model), _shape_key(params), int(bucket), metric)
+    fn = _CACHE.get(key)
+    if fn is None:
+        _MISSES += 1
+        metric_fn = decision.METRICS[metric]
+        forward = model.forward
+
+        @jax.jit
+        def fn(params, tokens):
+            logits, _, _ = forward(params, {"tokens": tokens})
+            last = logits[:, -1, :]
+            conf, pred = metric_fn(last)
+            return conf, pred
+
+        _CACHE[key] = fn
+    else:
+        _HITS += 1
+    return fn
+
+
+def cache_stats() -> Dict[str, int]:
+    return {"executables": len(_CACHE), "hits": _HITS, "misses": _MISSES}
+
+
+def clear_cache() -> None:
+    """Drop every cached executable (tests that count compiles from a
+    cold cache)."""
+    global _HITS, _MISSES
+    _CACHE.clear()
+    _HITS = 0
+    _MISSES = 0

@@ -1,14 +1,33 @@
-"""Server request queue (paper Fig. 2, "Request queue").
+"""Server request queue (paper Fig. 2, "Request queue") with backpressure.
 
 FIFO staging area for forwarded samples. In-process deque standing in for
 the paper's AMQP broker; semantics preserved (FIFO order, timestamped
-entries, result-distribution callbacks carried with the request).
+entries, result-distribution callbacks carried with the request) — plus a
+bounded-capacity mode the paper's broker would enforce physically:
+
+* ``capacity=None`` (default): unbounded, the legacy behaviour.
+* ``capacity=K, policy="reject"``: an arriving request that would exceed
+  K is refused admission (returned to the caller, who falls back to the
+  device's local prediction — admission control at the broker).
+* ``capacity=K, policy="shed_oldest"``: the *oldest* queued request is
+  displaced to admit the new one (bounded staleness: under overload the
+  queue serves the freshest work; the shed request is returned to the
+  caller for local fallback).
+
+``put`` returns the displaced request (the new one under ``reject``, the
+evicted head under ``shed_oldest``) or ``None`` when admission needed no
+drop, so the serving loop can surface every drop to the scheduler and
+complete the victim with its device-local result. Drop/peak counters
+(``n_rejected``/``n_shed``/``peak``) ride the queue for the engine's
+backpressure telemetry.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Any, Optional
+
+POLICIES = ("reject", "shed_oldest")
 
 
 @dataclasses.dataclass
@@ -21,11 +40,35 @@ class Request:
 
 
 class RequestQueue:
-    def __init__(self):
+    def __init__(self, capacity: Optional[int] = None,
+                 policy: str = "reject"):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES},"
+                             f" got {policy!r}")
+        self.capacity = capacity
+        self.policy = policy
+        self.n_rejected = 0      # arrivals refused admission ("reject")
+        self.n_shed = 0          # queued heads displaced ("shed_oldest")
+        self.peak = 0            # realized high-water mark
         self._q: deque[Request] = deque()
 
-    def put(self, req: Request) -> None:
+    def put(self, req: Request) -> Optional[Request]:
+        """Admit ``req``; returns the dropped request under backpressure
+        (``req`` itself when rejecting, the displaced head when
+        shedding) or ``None`` when nothing was dropped."""
+        if self.capacity is not None and len(self._q) >= self.capacity:
+            if self.policy == "reject":
+                self.n_rejected += 1
+                return req
+            dropped = self._q.popleft()
+            self.n_shed += 1
+            self._q.append(req)
+            return dropped
         self._q.append(req)
+        self.peak = max(self.peak, len(self._q))
+        return None
 
     def pop_batch(self, max_n: int) -> list[Request]:
         n = min(max_n, len(self._q))

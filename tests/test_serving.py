@@ -12,13 +12,16 @@ except ImportError:  # unit tests still run; property tests skip
 
 from repro.configs import get_config
 from repro.configs.cascade_tiers import (BATCH_LADDER, DEVICE_PROFILES,
-                                         SERVER_PROFILES)
+                                         SERVER_PROFILES, ServerProfile)
 from repro.models.model import build_model
+from repro.serving import executables
 from repro.serving.batching import pad_batch, pick_bucket
 from repro.serving.cascade import run_cascade
 from repro.serving.client import DeviceClient
 from repro.serving.engine import Request, ServedModel, ServerEngine
 from repro.serving.queue import RequestQueue
+from repro.serving.replay import replay_cascade
+from repro.sim import jaxsim, synthetic
 from repro.sim.events import make_scheduler
 
 
@@ -44,6 +47,60 @@ def test_property_pick_bucket(qlen, cap):
         for x in BATCH_LADDER:
             if x <= min(qlen, cap):
                 assert b >= x
+
+
+def test_pick_bucket_small_max_batch_regression():
+    """Seed bug: ``max_batch`` below the smallest ladder entry silently
+    returned bucket 1, over-dispatching a capacity-0 server."""
+    assert pick_bucket(10, 0) == 0
+    assert pick_bucket(10, 1) == 1
+    assert pick_bucket(10, 3) == 2      # largest ladder entry <= 3
+    assert pick_bucket(1, 64) == 1
+    assert pick_bucket(0, 64) == 0
+
+
+@given(qlen=st.integers(0, 300), cap=st.sampled_from([0, 1, 3, 64]),
+       ladder=st.sampled_from([
+           BATCH_LADDER, tuple(reversed(BATCH_LADDER)),
+           (8, 1, 64, 4, 2, 32, 16), (5, 3, 9), (2, 4)]))
+@settings(max_examples=120, deadline=None)
+def test_property_pick_bucket_cap_and_unsorted_ladders(qlen, cap, ladder):
+    """``pick_bucket`` must honour the min(queue, max_batch) cap exactly
+    and never assume the ladder is sorted (or contains 1)."""
+    b = pick_bucket(qlen, cap, ladder)
+    limit = min(qlen, cap)
+    feasible = [x for x in ladder if 0 < x <= limit]
+    if not feasible:
+        assert b == 0
+    else:
+        assert b == max(feasible)
+
+
+def test_queue_reject_policy():
+    q = RequestQueue(capacity=2, policy="reject")
+    assert q.put(Request(0, None, 0.0, 0.0)) is None
+    assert q.put(Request(1, None, 0.0, 0.0)) is None
+    late = Request(2, None, 0.0, 0.0)
+    assert q.put(late) is late           # newcomer bounced, queue intact
+    assert q.n_rejected == 1 and len(q) == 2
+    assert [r.device_id for r in q.pop_batch(4)] == [0, 1]
+
+
+def test_queue_shed_oldest_policy():
+    q = RequestQueue(capacity=2, policy="shed_oldest")
+    q.put(Request(0, None, 0.0, 0.0))
+    q.put(Request(1, None, 0.0, 0.0))
+    victim = q.put(Request(2, None, 0.0, 0.0))
+    assert victim is not None and victim.device_id == 0   # head displaced
+    assert q.n_shed == 1 and len(q) == 2
+    assert [r.device_id for r in q.pop_batch(4)] == [1, 2]
+
+
+def test_queue_validates_bounds():
+    with pytest.raises(ValueError):
+        RequestQueue(capacity=0)
+    with pytest.raises(ValueError):
+        RequestQueue(capacity=4, policy="panic")
 
 
 def test_pad_batch():
@@ -88,6 +145,180 @@ def test_engine_model_switching(tiny_pair):
     assert engine.switch(+1) and engine.active.name == "heavy"
     assert not engine.switch(+1)  # clamped
     assert engine.switch(-1) and engine.active.name == "fast"
+
+
+# ---------------------------------------------------------------------------
+# engine internals: capacity slots, in-flight ordering, double dispatch
+# (oracle served models: no jax on these paths)
+# ---------------------------------------------------------------------------
+def _oracle_engine(max_in_flight=1, queue=None, max_batch=8,
+                   base_latency=0.02):
+    def oracle(reqs):
+        return np.ones(len(reqs)), np.ones(len(reqs), np.int32)
+    prof = ServerProfile("osrv", "oracle", 0.9, base_latency, max_batch)
+    return ServerEngine(
+        [ServedModel("osrv", None, None, prof, oracle=oracle)],
+        max_in_flight=max_in_flight, queue=queue)
+
+
+def test_engine_refuses_double_dispatch():
+    """The seed relied on a caller-side ``server_busy`` flag: a second
+    ``step`` while a batch was in flight would double-book the server.
+    Capacity now lives in the engine — ``step`` at capacity returns
+    None even with a non-empty queue."""
+    engine = _oracle_engine()
+    for i in range(6):
+        engine.submit(Request(i, None, 0.0, 0.0))
+    out = engine.step(0.0)
+    assert out is not None and engine.in_flight == 1
+    assert engine.step(0.0) is None          # busy: refused, not rerun
+    assert len(engine.queue) == 6 - len(out["requests"])
+    engine.complete(out)
+    assert engine.in_flight == 0
+    assert engine.step(out["finish"]) is not None
+
+
+def test_engine_double_complete_rejected():
+    engine = _oracle_engine()
+    engine.submit(Request(0, None, 0.0, 0.0))
+    out = engine.step(0.0)
+    engine.complete(out)
+    with pytest.raises(ValueError):
+        engine.complete(out)
+
+
+def test_engine_multi_in_flight_ordering():
+    """Two slots: a big batch and a small one overlap; the small one
+    (lower latency) finishes first and frees its slot while the big one
+    is still in flight."""
+    engine = _oracle_engine(max_in_flight=2, max_batch=4)
+    for i in range(6):
+        engine.submit(Request(i, None, 0.0, 0.0))
+    out1 = engine.step(0.0)                  # bucket 4
+    out2 = engine.step(0.0)                  # bucket 2, cheaper
+    assert len(out1["requests"]) == 4 and len(out2["requests"]) == 2
+    assert engine.in_flight == 2 and engine.step(0.0) is None
+    assert out2["finish"] < out1["finish"]   # completions interleave
+    engine.complete(out2)                    # finish order, not dispatch
+    assert engine.in_flight == 1 and engine.slots_free == 1
+    engine.complete(out1)
+    assert engine.in_flight == 0
+
+
+def test_multi_in_flight_cascade_conserves_and_speeds_up():
+    """Server finish events interleaved with device events in the heap:
+    2 slots must still complete every sample exactly once, and drain the
+    forwarded backlog no slower than 1 slot."""
+    n, s = 8, 60
+    streams = synthetic.device_streams(n, s, 0.70, [0.90], 3)
+    lat, slo = np.full(n, 0.05, np.float32), np.full(n, 0.2, np.float32)
+    servers = (ServerProfile("slow", "synthetic", 0.90, 0.06, 8),)
+    # static: the forwarded set is identical across runs, so the only
+    # difference is how fast the server drains it
+    one = replay_cascade("static", streams, lat, slo, servers,
+                         max_in_flight=1)
+    two = replay_cascade("static", streams, lat, slo, servers,
+                         max_in_flight=2)
+    assert one.completed == n * s and two.completed == n * s
+    assert two.last_completion_t <= one.last_completion_t + 1e-9
+
+
+def test_bounded_queue_sheds_to_local_fallback():
+    """Backpressure loop: with everything forwarding into a capacity-1
+    queue and a slow server, shed requests complete with the device's
+    local prediction — nothing is lost, drops are counted, and the
+    ``on_queue_drop`` hook fires once per drop."""
+    n, s = 3, 20
+    streams = {
+        "confidence": np.zeros((n, s), np.float32),   # always forward
+        "correct_light": np.ones((n, s), np.int8),
+        "correct_heavy": np.ones((n, s, 1), np.int8),
+    }
+    servers = (ServerProfile("crawl", "synthetic", 0.90, 0.5, 2),)
+    q = RequestQueue(capacity=1, policy="shed_oldest")
+    res = replay_cascade("static", streams, np.full(n, 0.01),
+                         np.full(n, 1.0), servers, queue=q)
+    assert res.completed == n * s            # conservation incl. drops
+    assert res.dropped > 0 and res.dropped == q.n_shed
+    assert res.queue_peak <= 1
+    assert res.forwarded_frac == 1.0
+
+
+def test_throughput_denominator_is_last_completion():
+    """Seed bug: ``last_t`` advanced on trailing window boundaries, so a
+    window much longer than the drain time deflated throughput by the
+    window/drain ratio."""
+    n, s = 2, 10
+    streams = {
+        "confidence": np.full((n, s), 0.99, np.float32),  # all local
+        "correct_light": np.ones((n, s), np.int8),
+        "correct_heavy": np.ones((n, s, 1), np.int8),
+    }
+    servers = (ServerProfile("idle", "synthetic", 0.90, 0.02, 8),)
+    res = replay_cascade("static", streams, np.full(n, 0.01),
+                         np.full(n, 1.0), servers, window=60.0)
+    # drain = 10 samples x 10ms; the 60s window must not be the clock
+    assert res.completed == n * s
+    assert res.last_completion_t == pytest.approx(0.1, rel=0.05)
+    assert res.throughput == pytest.approx(n * s / res.last_completion_t,
+                                           rel=1e-6)
+    assert res.throughput > 100.0            # seed math gave ~0.33
+
+
+# ---------------------------------------------------------------------------
+# executable cache: compiles bounded by distinct buckets, never objects
+# ---------------------------------------------------------------------------
+def test_client_fleet_shares_one_executable(tiny_pair):
+    """Seed bug: per-client ``@jax.jit`` in ``__post_init__`` compiled
+    the identical forward once per client."""
+    (lm, lp, lcfg), _ = tiny_pair
+    executables.clear_cache()
+    before = jaxsim.stats_snapshot()["backend_compiles"]
+    clients = [DeviceClient(i, lm, lp, DEVICE_PROFILES["low"], 0.15, 1.5,
+                            0.5) for i in range(12)]
+    tok = np.zeros(8, np.int32)
+    for c in clients:
+        c.run_local(tok)
+    stats = executables.cache_stats()
+    assert stats["executables"] == 1 and stats["misses"] == 1
+    assert stats["hits"] == 11               # 11 clients reused it
+    compiles = jaxsim.stats_snapshot()["backend_compiles"] - before
+    assert compiles <= 1                     # seed paid 12
+
+
+def test_engine_compiles_bounded_by_buckets(tiny_pair):
+    """Two served models sharing one architecture must share per-bucket
+    executables; dispatching the same buckets again (other model, new
+    engine) compiles nothing."""
+    _, (hm, hp, hcfg) = tiny_pair
+    executables.clear_cache()
+    prof = SERVER_PROFILES["inceptionv3"]
+
+    def drive(engine, n_reqs):
+        rng = np.random.default_rng(0)
+        for i in range(n_reqs):
+            engine.submit(Request(i % 3, np.asarray(
+                rng.integers(0, hcfg.vocab_size, 8), np.int32), 0.0, 0.0))
+        t = 0.0
+        while (out := engine.step(t)) is not None:
+            engine.complete(out)
+            t = out["finish"]
+
+    engine = ServerEngine([ServedModel("fast", hm, hp, prof),
+                           ServedModel("heavy", hm, hp, prof)])
+    before = jaxsim.stats_snapshot()["backend_compiles"]
+    drive(engine, 10)                        # buckets 8, then 2
+    assert set(engine.batch_history) == {8, 2}
+    first = jaxsim.stats_snapshot()["backend_compiles"] - before
+    assert first <= 2                        # one per distinct bucket
+
+    before = jaxsim.stats_snapshot()["backend_compiles"]
+    engine2 = ServerEngine([ServedModel("fast", hm, hp, prof),
+                            ServedModel("heavy", hm, hp, prof)])
+    engine2.switch(+1)                       # other ladder entry
+    drive(engine2, 10)
+    assert jaxsim.stats_snapshot()["backend_compiles"] == before
+    assert executables.cache_stats()["executables"] == 2
 
 
 def test_live_cascade_end_to_end(tiny_pair):

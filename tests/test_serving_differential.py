@@ -1,0 +1,158 @@
+"""Sim-vs-serving differential: the LIVE serving path (real engine —
+bounded queue, ladder buckets, in-flight slots, scheduler loop) must
+track ``repro.sim.jaxsim`` on the same synthetic scenario within the
+documented replay tolerances (``repro.serving.replay.SERVING_TOL``),
+and complete exactly the same sample set (conservation), including
+under churn. Companion of tests/test_differential.py (events-vs-jaxsim);
+together the three engines are pinned pairwise.
+
+Also negative-tests the ``fig_serving`` gates of tools/check_bench.py:
+each serving gate must actually reject a regression, and silently
+dropping a gated metric must fail, not pass.
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import scenarios
+from repro.configs.cascade_tiers import ServerProfile
+from repro.serving.replay import SERVING_TOL, serving_vs_sim
+from repro.sim import synthetic
+
+N, S, SEED = 10, 80, 11
+SLO, BASE_LAT = 0.16, 0.06
+# slow enough that the queue builds and SLOs bind: the differential
+# exercises batching/backlog dynamics, not just the local fast path
+SERVERS = (ServerProfile("sdiff-fast", "synthetic", 0.90, 0.045, 16),
+           ServerProfile("sdiff-heavy", "synthetic", 0.94, 0.070, 16))
+
+
+def _scenario(name):
+    streams = synthetic.device_streams(N, S, 0.70, [0.90, 0.94], SEED)
+    rng = np.random.default_rng(2)
+    lat = (BASE_LAT * rng.uniform(0.9, 1.1, N)).astype(np.float32)
+    r = scenarios.realize(scenarios.SCENARIOS[name], [SEED], N, S, lat)
+    st = dict(streams)
+    if r["arrive"] is not None:
+        st["arrive"] = r["arrive"][0]
+    return st, lat, r["join_t"][0], r["leave_t"][0]
+
+
+@pytest.mark.parametrize("sched", ["static", "multitasc", "multitasc++"])
+@pytest.mark.parametrize("scn", ["steady", "churn"])
+def test_serving_matches_sim(scn, sched):
+    st, lat, join_t, leave_t = _scenario(scn)
+    slo = np.full(N, SLO, np.float32)
+    live, sim, d = serving_vs_sim(sched, st, lat, slo, SERVERS,
+                                  join_t=join_t, leave_t=leave_t)
+    tol = SERVING_TOL[sched]
+    assert d["d_completed"] == 0, \
+        f"conservation broken: live {live.completed} vs sim " \
+        f"{int(sim['completed'])}"
+    assert live.completed > 0
+    assert d["d_sr"] <= tol["sr"]
+    assert d["d_thr_rel"] <= tol["thr_rel"]
+    assert d["d_fwd"] <= tol["fwd"]
+
+
+def test_serving_matches_sim_under_drift_and_switching():
+    """The hardest combination: non-stationary arrivals + churn + model
+    switching, adaptive scheduler."""
+    st, lat, join_t, leave_t = _scenario("churn_drift")
+    slo = np.full(N, SLO, np.float32)
+    live, sim, d = serving_vs_sim(
+        "multitasc++", st, lat, slo, SERVERS, model_switching=True,
+        join_t=join_t, leave_t=leave_t)
+    tol = SERVING_TOL["multitasc++"]
+    assert d["d_completed"] == 0
+    assert d["d_sr"] <= tol["sr"]
+    assert d["d_thr_rel"] <= tol["thr_rel"]
+    assert d["d_fwd"] <= tol["fwd"]
+
+
+# ---------------------------------------------------------------------------
+# check_bench: the fig_serving gates actually reject regressions
+# ---------------------------------------------------------------------------
+def _check_bench(tmp_path, new_extra, base_extra, argv_extra=()):
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_serving_probe", root / "tools/check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    row = {"wall_s": 1.0, "n_points": 4, "n_compiles": 9, "n_events": 10,
+           "n_shards": 1, "n_points_sharded": 0}
+    new = {"_schema": mod.BENCH_SCHEMA, "fig_serving": {**row, **new_extra}}
+    base = {"_schema": mod.BENCH_SCHEMA,
+            "fig_serving": {**row, **base_extra}}
+    pn, pb = tmp_path / "new.json", tmp_path / "base.json"
+    pn.write_text(json.dumps(new))
+    pb.write_text(json.dumps(base))
+    old = sys.argv
+    sys.argv = ["check_bench", str(pn), str(pb), *argv_extra]
+    try:
+        return mod.main()
+    finally:
+        sys.argv = old
+
+
+GOOD = {"serving_d_sr": 0.5, "serving_d_thr_rel": 0.01,
+        "serving_d_fwd": 0.005, "serving_d_completed": 0,
+        "serving_compiles": 4, "serving_compile_budget": 4,
+        "serving_extra_client_compiles": 0}
+
+
+def test_check_bench_passes_healthy_fig_serving(tmp_path):
+    assert _check_bench(tmp_path, GOOD, GOOD) == 0
+
+
+def test_check_bench_rejects_serving_delta_regressions(tmp_path):
+    assert _check_bench(tmp_path, {**GOOD, "serving_d_sr": 5.0},
+                        GOOD) == 1
+    assert _check_bench(tmp_path, {**GOOD, "serving_d_thr_rel": 0.2},
+                        GOOD) == 1
+    assert _check_bench(tmp_path, {**GOOD, "serving_d_fwd": 0.3},
+                        GOOD) == 1
+
+
+def test_check_bench_rejects_conservation_break(tmp_path):
+    assert _check_bench(tmp_path, {**GOOD, "serving_d_completed": 3},
+                        GOOD) == 1
+
+
+def test_check_bench_rejects_serving_compile_overrun(tmp_path):
+    # a per-object recompile storm shows up as compiles > bucket budget
+    assert _check_bench(tmp_path, {**GOOD, "serving_compiles": 9},
+                        GOOD) == 1
+    assert _check_bench(
+        tmp_path, {**GOOD, "serving_extra_client_compiles": 2},
+        GOOD) == 1
+
+
+def test_check_bench_rejects_missing_serving_metrics(tmp_path):
+    # a refactor that silently drops a gated metric must fail, not pass
+    for key in ("serving_d_sr", "serving_d_completed",
+                "serving_compiles", "serving_extra_client_compiles"):
+        crippled = {k: v for k, v in GOOD.items() if k != key}
+        assert _check_bench(tmp_path, crippled, GOOD) == 1, key
+
+
+def test_check_bench_require_fig_serving_fails_when_missing(tmp_path):
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_serving_req_probe", root / "tools/check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    pn, pb = tmp_path / "new.json", tmp_path / "base.json"
+    pn.write_text(json.dumps({"_schema": mod.BENCH_SCHEMA}))
+    pb.write_text(json.dumps({"_schema": mod.BENCH_SCHEMA}))
+    old = sys.argv
+    sys.argv = ["check_bench", str(pn), str(pb),
+                "--require", "fig_serving"]
+    try:
+        assert mod.main() == 1
+    finally:
+        sys.argv = old

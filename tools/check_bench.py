@@ -30,6 +30,19 @@ Hard failures (exit 1):
     ``max_compiles_per_n`` exceeds 1 — some fleet size recompiled
     beyond its one event-core executable.
 
+  * a ``fig_serving`` sim-vs-serving delta (``serving_d_sr`` /
+    ``serving_d_thr_rel`` / ``serving_d_fwd``) exceeds its
+    ``SERVING_DELTA_LIMITS`` entry — the live serving path diverged
+    from the vectorized simulator beyond the replay tolerances
+    (``repro.serving.replay.SERVING_TOL``) — or
+    ``serving_d_completed != 0`` (both paths must complete the same
+    sample set, exactly, even under churn), or ``serving_compiles``
+    exceeds ``serving_compile_budget`` (serving executables must be
+    bounded by distinct ladder buckets + the shared client forward,
+    never by client/served-model count), or
+    ``serving_extra_client_compiles != 0`` (growing the fleet over the
+    same models recompiled something).
+
 Wall time is reported but only warned about by default (CI machines are
 too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
 R * baseline into a failure.
@@ -53,6 +66,13 @@ LANE_RATIO_LIMIT = 1.25
 # benchmarks/fig_scale.py) may be at most this (measured ~0.3 quick,
 # ~1.0 full; a flat-frontier regression at 100k devices lands ~10)
 SCALE_WPE_LIMIT = 3.0
+# fig_serving: worst-row live-vs-sim deltas (benchmarks/fig_serving.py),
+# sized like repro.serving.replay.SERVING_TOL's adaptive-scheduler rows
+SERVING_DELTA_LIMITS = {
+    "serving_d_sr": 3.0,        # SLO-satisfaction points
+    "serving_d_thr_rel": 0.05,  # relative throughput
+    "serving_d_fwd": 0.05,      # forwarded fraction
+}
 
 
 def main() -> int:
@@ -145,6 +165,48 @@ def main() -> int:
                     f"{fig}: max_compiles_per_n "
                     f"{n['max_compiles_per_n']} > 1 (a fleet size "
                     f"recompiled beyond its one event-core executable)")
+        for mk, lim in sorted(SERVING_DELTA_LIMITS.items()):
+            if mk not in b:
+                continue
+            if n.get(mk) is None:
+                failures.append(f"{fig}: {mk} missing from new run")
+            elif n[mk] > lim:
+                failures.append(
+                    f"{fig}: {mk} {n[mk]:.4f} > {lim} (live serving "
+                    f"path diverged from the simulator beyond the "
+                    f"replay tolerance)")
+        if "serving_d_completed" in b:
+            if n.get("serving_d_completed") is None:
+                failures.append(
+                    f"{fig}: serving_d_completed missing from new run")
+            elif n["serving_d_completed"] != 0:
+                failures.append(
+                    f"{fig}: serving_d_completed "
+                    f"{n['serving_d_completed']} != 0 (sim and serving "
+                    f"completed different sample sets: conservation "
+                    f"broken)")
+        if "serving_compile_budget" in b:
+            if n.get("serving_compiles") is None or \
+                    n.get("serving_compile_budget") is None:
+                failures.append(
+                    f"{fig}: serving_compiles/serving_compile_budget "
+                    f"missing from new run")
+            elif n["serving_compiles"] > n["serving_compile_budget"]:
+                failures.append(
+                    f"{fig}: serving_compiles {n['serving_compiles']} > "
+                    f"budget {n['serving_compile_budget']} (serving "
+                    f"executables must be bounded by distinct buckets + "
+                    f"the shared client forward, not object count)")
+        if "serving_extra_client_compiles" in b:
+            if n.get("serving_extra_client_compiles") is None:
+                failures.append(
+                    f"{fig}: serving_extra_client_compiles missing from "
+                    f"new run")
+            elif n["serving_extra_client_compiles"] != 0:
+                failures.append(
+                    f"{fig}: serving_extra_client_compiles "
+                    f"{n['serving_extra_client_compiles']} != 0 (adding "
+                    f"clients over warm models recompiled)")
         if b.get("wall_s"):
             ratio = n["wall_s"] / b["wall_s"]
             line = (f"{fig}: wall {n['wall_s']:.3f}s vs baseline "

@@ -7,7 +7,6 @@ samples showing the forwarding decision (BvSB, Eq. 2/3) in action.
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -36,15 +35,15 @@ def main():
 
     # run the cascade on real logits
     rng = np.random.default_rng(0)
-    tokens = jnp.asarray(rng.integers(0, light_cfg.vocab_size, (16, 24)),
-                         jnp.int32)
+    tokens = np.asarray(rng.integers(0, light_cfg.vocab_size, (16, 24)),
+                        np.int32)
     logits, _, _ = light.forward(lp, {"tokens": tokens})
     conf, pred = decision.bvsb_confidence(logits[:, -1, :])
     fwd = decision.decide(conf, thresh)
     print(f"\nbatch of {len(tokens)}: {int(fwd.sum())} forwarded "
           f"(mean BvSB {float(conf.mean()):.3f})")
 
-    fwd_idx = jnp.nonzero(fwd)[0]
+    fwd_idx = np.nonzero(np.asarray(fwd))[0]
     if len(fwd_idx):
         hlogits, _, _ = heavy.forward(hp, {"tokens": tokens[fwd_idx]})
         hconf, hpred = decision.bvsb_confidence(hlogits[:, -1, :])

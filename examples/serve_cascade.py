@@ -13,7 +13,6 @@ The full paper system with *real models end to end*:
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -41,9 +40,11 @@ def train_pair(n_classes=8, seq_len=16, steps=60, verbose=True):
     class TaskData:
         def batch_at(self, step, bs=64):
             i = (step * bs) % (len(toks) - bs)
-            t = jnp.asarray(toks[i:i + bs])
-            lbl = jnp.full((bs, seq_len), -100, jnp.int32)
-            lbl = lbl.at[:, -1].set(jnp.asarray(labels[i:i + bs], jnp.int32))
+            # host-side batch assembly stays numpy; the train step's jit
+            # boundary moves it to device without an eager compile
+            t = np.asarray(toks[i:i + bs])
+            lbl = np.full((bs, seq_len), -100, np.int32)
+            lbl[:, -1] = np.asarray(labels[i:i + bs], np.int32)
             return {"tokens": t, "labels": lbl}
 
     data = TaskData()
@@ -78,7 +79,7 @@ def main():
     datasets, labelsets = [], []
     for i in range(n):
         idx = rng.integers(0, len(toks), args.samples)
-        datasets.append([jnp.asarray(toks[j]) for j in idx])
+        datasets.append([np.asarray(toks[j]) for j in idx])
         labelsets.append([int(labels[j]) for j in idx])
 
     for sched_name in ("multitasc++", "static"):

@@ -1,0 +1,33 @@
+"""Static analysis for the cascade repo: trace discipline, host
+dispatch, lane-masking invariants, serving concurrency.
+
+Four rule families, run by ``tools/lint.py`` (CI gates the tree on
+them) and pinned by ``tests/test_lint.py``:
+
+* ``trace-discipline`` (TD*): trace the real jit entry points
+  (the lane event core, the scheduler ``update`` functions, the model-
+  switching decision, the serving classify executable) and walk their
+  ClosedJaxprs for float64/complex128 avals, weak-typed entry avals
+  (each weak/strong split is a jit-cache key split), traced per-point
+  values leaking into the ``JaxSimStatic`` recompile key, and donated
+  buffers the core never reads.
+* ``host-dispatch`` (HD*): AST lint over the host-loop surfaces for
+  the idioms behind every past recompile leak — eager ``jnp.*``
+  construction on host state, integer indexing of device arrays in
+  host wrappers, ``jax.jit`` closures created per object, and host
+  calls into the traced scheduler kernels.
+* ``lane-mask`` (LM*): verify, from the jaxpr of the ``lane_stepper``
+  body, that every carry-field write is gated on the active-lane
+  predicate and that the boundary ``lax.cond`` only reaches
+  ``BOUNDARY_FIELDS`` and the trace rows (the machine form of the
+  "Lane-masking invariants" prose in docs/ARCHITECTURE.md).
+* ``concurrency`` (CC*): serving-layer classes whose attributes are
+  mutated from more than one call context must declare them in a
+  ``GUARDED_BY`` annotation — the lock map the async transport work
+  will implement.
+
+The module has no side effects at import; heavy tracing happens only
+when the trace/lane rules run.
+"""
+from repro.analysis.findings import Finding, Severity  # noqa: F401
+from repro.analysis.driver import run_lint, all_rules  # noqa: F401

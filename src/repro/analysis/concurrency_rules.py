@@ -1,0 +1,130 @@
+"""Concurrency-discipline rules (CC*) for ``repro/serving``.
+
+The serving layer is single-threaded today (a virtual-clock event
+loop), but the ROADMAP's async transport will drive the engine and the
+queue from multiple call contexts. Runway-clearing contract:
+
+* CC001 — an instance attribute mutated from **more than one** method
+  of a serving class must be declared in that class's ``GUARDED_BY``
+  class attribute (a ``{attr: lock-note}`` dict literal). The
+  annotation is the lock map the async transport implements; until
+  then it documents exactly which state the future lock must cover.
+* CC002 — a ``GUARDED_BY`` entry for an attribute that is *not*
+  multi-context-mutated is stale and fails (the map must shrink with
+  the code, mirroring the allowlist's exactness policy).
+
+Mutation = assignment/augmented assignment to ``self.X`` (including
+``self.X[...] = ...``) or a mutating method call on it
+(``self.X.append(...)``, ``.popleft()``, ...). ``__init__`` and
+``__post_init__`` are construction, not a call context.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.findings import Finding, Severity
+
+FAMILY = "concurrency"
+
+MUTATORS = {"append", "appendleft", "add", "remove", "discard", "pop",
+            "popleft", "clear", "extend", "insert", "update",
+            "setdefault", "sort", "reverse"}
+CONSTRUCTORS = {"__init__", "__post_init__", "__new__"}
+
+
+def _self_attr(node: ast.expr) -> str | None:
+    """``self.X`` / ``self.X[...]`` -> ``X``."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _method_mutations(method: ast.FunctionDef) -> Set[str]:
+    muts: Set[str] = set()
+    for node in ast.walk(method):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                attr = _self_attr(t)
+                if attr:
+                    muts.add(attr)
+        elif isinstance(node, ast.Call) and node.func and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in MUTATORS:
+            attr = _self_attr(node.func.value)
+            if attr:
+                muts.add(attr)
+    return muts
+
+
+def _guarded_by(cls: ast.ClassDef) -> Dict[str, int]:
+    """attr -> lineno of its GUARDED_BY entry (empty when absent)."""
+    out: Dict[str, int] = {}
+    for node in cls.body:
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "GUARDED_BY"
+                        for t in node.targets) \
+                and isinstance(node.value, ast.Dict):
+            for key in node.value.keys:
+                if isinstance(key, ast.Constant) \
+                        and isinstance(key.value, str):
+                    out[key.value] = node.lineno
+    return out
+
+
+def scan_source(rel_path: str, source: str) -> List[Finding]:
+    tree = ast.parse(source, filename=rel_path)
+    findings: List[Finding] = []
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        by_attr: Dict[str, Set[str]] = {}
+        for node in cls.body:
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if node.name in CONSTRUCTORS:
+                continue
+            for attr in _method_mutations(node):
+                by_attr.setdefault(attr, set()).add(node.name)
+        guarded = _guarded_by(cls)
+        shared = {a for a, ms in by_attr.items() if len(ms) >= 2}
+        for attr in sorted(shared - set(guarded)):
+            findings.append(Finding(
+                "CC001", FAMILY, Severity.ERROR, rel_path, cls.lineno,
+                f"{cls.name}.{attr}",
+                f"attribute mutated from multiple call contexts "
+                f"({', '.join(sorted(by_attr[attr]))}) without a "
+                f"GUARDED_BY entry — declare the lock that will cover "
+                f"it before the async transport lands"))
+        for attr in sorted(set(guarded) - shared):
+            findings.append(Finding(
+                "CC002", FAMILY, Severity.ERROR, rel_path,
+                guarded[attr], f"{cls.name}.{attr}",
+                f"stale GUARDED_BY entry: attribute is not mutated "
+                f"from multiple call contexts (mutators: "
+                f"{sorted(by_attr.get(attr, set())) or 'none'}) — "
+                f"drop it so the lock map stays exact"))
+    return findings
+
+
+def rule_cc(ctx) -> List[Finding]:
+    out: List[Finding] = []
+    for abs_path, rel_path in ctx.files:
+        if "/serving/" not in rel_path.replace("\\", "/") \
+                and not rel_path.startswith("tests/lint_corpus"):
+            continue
+        with open(abs_path, encoding="utf-8") as f:
+            out.extend(scan_source(rel_path, f.read()))
+    return out
+
+
+def rule_cc001(ctx) -> List[Finding]:
+    return [f for f in rule_cc(ctx) if f.rule == "CC001"]
+
+
+def rule_cc002(ctx) -> List[Finding]:
+    return [f for f in rule_cc(ctx) if f.rule == "CC002"]

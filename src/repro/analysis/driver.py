@@ -1,0 +1,225 @@
+"""Lint driver: rule registry, target discovery, execution tracking.
+
+Two modes:
+
+* **tree mode** (no explicit paths): scan the default host-loop file
+  set AND run the jaxpr/lane rules against the repo's real entry
+  points (``default_trace_entries``/``default_lane_entries``).
+* **paths mode** (explicit files, e.g. the negative corpus): AST rules
+  run on those files; jaxpr/lane rules run on the entries the modules
+  themselves export via the conventions
+  ``LINT_TRACE_ENTRIES = [{"name", "build", "donate"?, "x64"?}, ...]``,
+  ``LINT_STATIC_KEY_ENTRIES = [{"name", "static_of", "spec_a",
+  "spec_b", "traced_fields"?}, ...]`` and
+  ``LINT_LANE_ENTRY = {"body", "st0", "boundary_fields",
+  "active_key"?, "trace_key"?}``.
+
+Execution is tracked fail-closed: a rule that raises records a rule
+error (the run fails regardless of findings), and a rule whose family
+had no entries/files to act on is *not* counted as executed — so
+``--require`` can detect a gate that went vacuous.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib.util
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import concurrency_rules, host_rules, lane_rules, \
+    trace_rules
+from repro.analysis.allowlist import AllowEntry, apply_allowlist
+from repro.analysis.findings import Finding, RuleSpec, Severity
+
+# host-loop surfaces the AST rules scan in tree mode (repo-relative
+# globs); models/ and launch/ are trace-layer code, tests/ drive eager
+# jnp on purpose — out of scope by design, documented in
+# docs/ARCHITECTURE.md
+DEFAULT_SCAN = (
+    "src/repro/serving", "src/repro/core", "src/repro/configs",
+    "src/repro/analysis", "src/repro/sim/jaxsim.py",
+    "src/repro/sim/events.py", "src/repro/sim/synthetic.py",
+    "benchmarks", "tools", "examples",
+)
+EXCLUDE_DIRS = {"__pycache__", "lint_corpus"}
+
+
+@dataclasses.dataclass
+class Context:
+    files: List[Tuple[str, str]]          # (abs, rel)
+    trace_entries: List[trace_rules.TraceEntry]
+    static_key_entries: List[trace_rules.StaticKeyEntry]
+    lane_entries: List[lane_rules.LaneEntry]
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]               # post-allowlist
+    suppressed: List[Finding]
+    stale_allowlist: List[Finding]
+    rule_errors: Dict[str, str]
+    executed: List[str]                   # rule ids that actually ran
+
+    def failures(self, fail_on: str) -> List[Finding]:
+        keep = Severity.ORDER[fail_on]
+        return [f for f in self.findings
+                if Severity.ORDER[f.severity] >= keep]
+
+
+def all_rules() -> List[RuleSpec]:
+    return [
+        RuleSpec("TD001", trace_rules.FAMILY, Severity.ERROR,
+                 "no float64/complex128 aval in traced entry points",
+                 trace_rules.rule_td001),
+        RuleSpec("TD002", trace_rules.FAMILY, Severity.ERROR,
+                 "no weak-typed entry aval (jit-cache key split)",
+                 trace_rules.rule_td002),
+        RuleSpec("TD003", trace_rules.FAMILY, Severity.ERROR,
+                 "recompile key is invariant under traced-field changes",
+                 trace_rules.rule_td003),
+        RuleSpec("TD004", trace_rules.FAMILY, Severity.ERROR,
+                 "every donated buffer is consumed",
+                 trace_rules.rule_td004),
+        RuleSpec("HD001", host_rules.FAMILY, Severity.WARN,
+                 "no eager jnp construction in host context",
+                 host_rules.rule_hd001),
+        RuleSpec("HD002", host_rules.FAMILY, Severity.WARN,
+                 "no host indexing of device arrays",
+                 host_rules.rule_hd002),
+        RuleSpec("HD003", host_rules.FAMILY, Severity.WARN,
+                 "no per-object jax.jit closures (memoize factories)",
+                 host_rules.rule_hd003),
+        RuleSpec("HD004", host_rules.FAMILY, Severity.WARN,
+                 "no host calls into traced scheduler kernels",
+                 host_rules.rule_hd004),
+        RuleSpec("LM001", lane_rules.FAMILY, Severity.ERROR,
+                 "every lane-carry write is active-gated",
+                 lane_rules.rule_lm001),
+        RuleSpec("LM002", lane_rules.FAMILY, Severity.ERROR,
+                 "boundary cond touches only BOUNDARY_FIELDS + traces",
+                 lane_rules.rule_lm002),
+        RuleSpec("CC001", concurrency_rules.FAMILY, Severity.ERROR,
+                 "multi-context serving mutations carry GUARDED_BY",
+                 concurrency_rules.rule_cc001),
+        RuleSpec("CC002", concurrency_rules.FAMILY, Severity.ERROR,
+                 "GUARDED_BY lock map is exact (no stale entries)",
+                 concurrency_rules.rule_cc002),
+    ]
+
+
+def _discover_files(repo_root: str) -> List[Tuple[str, str]]:
+    out: List[Tuple[str, str]] = []
+    for target in DEFAULT_SCAN:
+        abs_t = os.path.join(repo_root, target)
+        if os.path.isfile(abs_t):
+            out.append((abs_t, target))
+            continue
+        for dirpath, dirnames, filenames in os.walk(abs_t):
+            dirnames[:] = [d for d in dirnames if d not in EXCLUDE_DIRS]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    ap = os.path.join(dirpath, fn)
+                    out.append((ap, os.path.relpath(ap, repo_root)
+                                .replace(os.sep, "/")))
+    return out
+
+
+def _load_module(path: str):
+    name = "_lint_target_" + os.path.basename(path).replace(".py", "")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    finally:
+        sys.modules.pop(name, None)
+    return mod
+
+
+def _entries_from_paths(paths: Sequence[str]):
+    trace_e, static_e, lane_e = [], [], []
+    for p in paths:
+        mod = _load_module(p)
+        for raw in getattr(mod, "LINT_TRACE_ENTRIES", []):
+            trace_e.append(trace_rules.TraceEntry(
+                name=raw["name"], build=raw["build"],
+                donate=tuple(raw.get("donate", ())),
+                x64=bool(raw.get("x64", False))))
+        for raw in getattr(mod, "LINT_STATIC_KEY_ENTRIES", []):
+            static_e.append(trace_rules.StaticKeyEntry(
+                name=raw["name"], static_of=raw["static_of"],
+                spec_a=raw["spec_a"], spec_b=raw["spec_b"],
+                traced_fields=tuple(raw.get("traced_fields", ()))))
+        raw = getattr(mod, "LINT_LANE_ENTRY", None)
+        if raw:
+            lane_e.append(lane_rules.LaneEntry(
+                name=raw.get("name", os.path.basename(p)),
+                body=raw["body"], st0=raw["st0"],
+                boundary_fields=tuple(raw["boundary_fields"]),
+                active_key=raw.get("active_key", "active"),
+                trace_key=raw.get("trace_key", "traces")))
+    return trace_e, static_e, lane_e
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/driver.py -> repo root is three dirs above src
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def build_context(paths: Optional[Sequence[str]] = None,
+                  repo_root: Optional[str] = None) -> Context:
+    root = repo_root or _repo_root()
+    if paths:
+        files = [(os.path.abspath(p),
+                  os.path.relpath(os.path.abspath(p), root)
+                  .replace(os.sep, "/")) for p in paths]
+        trace_e, static_e, lane_e = _entries_from_paths(
+            [a for a, _ in files])
+    else:
+        files = _discover_files(root)
+        trace_e = trace_rules.default_trace_entries()
+        static_e = trace_rules.default_static_key_entries()
+        lane_e = lane_rules.default_lane_entries()
+    return Context(files=files, trace_entries=trace_e,
+                   static_key_entries=static_e, lane_entries=lane_e)
+
+
+def _has_work(rule: RuleSpec, ctx: Context) -> bool:
+    if rule.id.startswith("TD003"):
+        return bool(ctx.static_key_entries)
+    if rule.family == trace_rules.FAMILY:
+        return bool(ctx.trace_entries)
+    if rule.family == lane_rules.FAMILY:
+        return bool(ctx.lane_entries)
+    return bool(ctx.files)
+
+
+def run_lint(paths: Optional[Sequence[str]] = None, *,
+             allowlist: Optional[List[AllowEntry]] = None,
+             repo_root: Optional[str] = None,
+             rules: Optional[Sequence[RuleSpec]] = None) -> Report:
+    ctx = build_context(paths, repo_root)
+    allowlist = allowlist or []
+    findings: List[Finding] = []
+    rule_errors: Dict[str, str] = {}
+    executed: List[str] = []
+    for rule in rules or all_rules():
+        if not _has_work(rule, ctx):
+            continue
+        try:
+            findings.extend(rule.fn(ctx))
+            executed.append(rule.id)
+        except Exception as e:  # fail closed: a crashed rule fails the run
+            rule_errors[rule.id] = f"{type(e).__name__}: {e}"
+    kept, suppressed = apply_allowlist(findings, allowlist)
+    stale = [Finding(
+        "ALLOW", "allowlist", Severity.ERROR, e.path, 0,
+        e.symbol or "*",
+        f"stale allowlist entry for {e.rule} (suppresses nothing); "
+        f"remove it — reason was: {e.reason}")
+        for e in allowlist if e.hits == 0]
+    return Report(findings=kept, suppressed=suppressed,
+                  stale_allowlist=stale, rule_errors=rule_errors,
+                  executed=executed)

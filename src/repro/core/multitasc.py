@@ -61,11 +61,20 @@ def update(state, observed_batch, b_opt, cfg: MultiTASCConfig, active=None):
     thresh = state["thresh"]
     over = observed_batch > b_opt + cfg.deadband
     under = observed_batch < b_opt - cfg.deadband
-    delta = jnp.where(over, -cfg.step, jnp.where(under, cfg.step, 0.0))
-    new = jnp.clip(thresh + delta, 0.0, 1.0)
+    # strong float32 scalars: python floats here become weak float64
+    # consts under x64 (tools/lint.py TD001 traces this with x64 on)
+    step = jnp.float32(cfg.step)
+    delta = jnp.where(over, -step, jnp.where(under, step,
+                                             jnp.float32(0.0)))
+    new = jnp.clip(thresh + delta, jnp.float32(0.0), jnp.float32(1.0))
     if active is not None:
         new = jnp.where(active, new, thresh)
     return {"thresh": new}
+
+
+# one executable per (fleet shape, b_opt, cfg), shared across
+# instances; b_opt is init-time config, so it rides the static key
+_update_jit = jax.jit(update, static_argnames=("b_opt", "cfg"))
 
 
 class MultiTASC:
@@ -74,12 +83,16 @@ class MultiTASC:
     def __init__(self, n_devices: int, server_profile, slo: float,
                  cfg: MultiTASCConfig = MultiTASCConfig(), init_threshold=0.5):
         self.cfg = cfg
-        self.state = init_state(n_devices, init_threshold)
+        # numpy host state (same discipline as Static/MultiTASCPP: no
+        # eager jnp construction on the host path)
+        self.state = {"thresh": np.full((n_devices,), init_threshold,
+                                        np.float32)}
         self.b_opt = optimal_batch(server_profile, slo)
         self._recent_batch = 0
 
     def thresholds(self):
-        return self.state["thresh"]
+        # host copy: callers index/iterate freely without eager slices
+        return np.asarray(self.state["thresh"])
 
     def on_server_batch(self, batch_size: int) -> None:
         self._recent_batch = batch_size
@@ -90,5 +103,6 @@ class MultiTASC:
         return float(np.asarray(self.state["thresh"])[device_id])
 
     def on_window(self, active=None) -> None:
-        self.state = update(self.state, self._recent_batch, self.b_opt,
-                            self.cfg, active)
+        self.state = _update_jit(
+            self.state, np.int32(self._recent_batch), self.b_opt,
+            self.cfg, None if active is None else np.asarray(active, bool))

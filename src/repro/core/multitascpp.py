@@ -64,22 +64,35 @@ def update(state, sr_update, cfg: MultiTASCPPConfig, *, sr_target=None,
     if n_active is None:
         n_active = jnp.sum(active) if active is not None else thresh.shape[0]
     n_active = jnp.maximum(jnp.asarray(n_active, jnp.float32), 1.0)
+    # config scalars as strong float32: under x64 a bare python float
+    # closed over here becomes a weak float64 const (tools/lint.py TD001
+    # traces this function with x64 enabled)
+    a = jnp.float32(cfg.a)
+    growth = jnp.float32(cfg.mult_growth)
 
     # Eq. 4 (continuous, proportional)
-    dthresh = -cfg.a * (sr_target - sr_update)
+    dthresh = -a * (sr_target - sr_update)
     thresh_updated = thresh + dthresh
 
     # Alg. 1 (threshold scaling)
     raising = sr_update > sr_target
     thresh_final = jnp.where(raising, mult * thresh_updated, thresh_updated)
-    mult_new = jnp.where(raising, mult * (1.0 + cfg.mult_growth / n_active),
-                         1.0)
+    mult_new = jnp.where(raising, mult * (1.0 + growth / n_active),
+                         jnp.float32(1.0))
 
-    thresh_final = jnp.clip(thresh_final, cfg.thresh_min, cfg.thresh_max)
+    thresh_final = jnp.clip(thresh_final, jnp.float32(cfg.thresh_min),
+                            jnp.float32(cfg.thresh_max))
     if active is not None:
         thresh_final = jnp.where(active, thresh_final, thresh)
         mult_new = jnp.where(active, mult_new, mult)
     return {"thresh": thresh_final, "mult": mult_new}
+
+
+# the wrapper's single jit boundary: one executable per (fleet shape,
+# cfg), shared by every report() of every MultiTASCPP instance — host
+# code never dispatches the update ops eagerly (cfg is a frozen
+# dataclass, hence a hashable static key)
+_update_jit = jax.jit(update, static_argnames=("cfg",))
 
 
 class MultiTASCPP:
@@ -87,6 +100,10 @@ class MultiTASCPP:
 
     Keeps the vectorized state and applies ``update`` whenever a device
     reports its windowed SR (per-device reporting, as in the paper).
+    Host state is numpy: eager jnp construction / jnp indexing here
+    compiled throwaway executables per call and per fleet size (the
+    leak class tools/lint.py HD001/HD002 now gates); the only device
+    work is the jitted ``update`` call.
     """
 
     name = "multitasc++"
@@ -94,26 +111,32 @@ class MultiTASCPP:
     def __init__(self, n_devices: int, cfg: MultiTASCPPConfig = MultiTASCPPConfig(),
                  init_threshold=0.5, sr_targets=None):
         self.cfg = cfg
-        self.state = init_state(n_devices, init_threshold)
         self.n = n_devices
-        self.sr_targets = (jnp.full((n_devices,), cfg.sr_target)
+        self.state = {
+            "thresh": np.full((n_devices,), init_threshold, np.float32),
+            "mult": np.ones((n_devices,), np.float32),
+        }
+        self.sr_targets = (np.full((n_devices,), cfg.sr_target, np.float32)
                            if sr_targets is None
-                           else jnp.asarray(sr_targets, jnp.float32))
-        self.active = jnp.ones((n_devices,), bool)
+                           else np.asarray(sr_targets, np.float32))
+        self.active = np.ones((n_devices,), bool)
 
     def thresholds(self):
-        return self.state["thresh"]
+        # host copy: callers index/iterate freely without eager slices
+        return np.asarray(self.state["thresh"])
 
     def set_active(self, active):
-        self.active = jnp.asarray(active, bool)
+        self.active = np.asarray(active, bool)
 
     def report(self, device_id: int, sr_update: float) -> float:
         """Single-device SR report -> new threshold for that device."""
-        sr = jnp.where(jnp.arange(self.n) == device_id, sr_update,
-                       self.sr_targets)  # no-op delta for other devices
-        mask = jnp.arange(self.n) == device_id
-        new = update(self.state, sr, self.cfg, sr_target=self.sr_targets,
-                     n_active=jnp.sum(self.active), active=mask & self.active)
+        mask = np.arange(self.n) == device_id
+        sr = np.where(mask, np.float32(sr_update),
+                      self.sr_targets)  # no-op delta for other devices
+        new = _update_jit(self.state, sr, self.cfg,
+                          sr_target=self.sr_targets,
+                          n_active=np.float32(self.active.sum()),
+                          active=mask & self.active)
         self.state = new
         # host transfer, not an eager per-fleet-size dynamic_slice
         return float(np.asarray(new["thresh"])[device_id])

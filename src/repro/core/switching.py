@@ -50,6 +50,13 @@ def decide(thresholds, tier_ids, n_tiers, c_lower, c_upper_per_tier,
                      jnp.where(all_above, 1, 0)).astype(jnp.int32)
 
 
+# host-loop boundary for the live/reference sims: one executable per
+# (fleet shape, n_tiers) instead of eagerly dispatching decide's op
+# graph every window (callers pass np.float32/np.int32 inputs so the
+# cache key is stable — tools/lint.py HD004/TD002)
+decide_jit = jax.jit(decide, static_argnames=("n_tiers",))
+
+
 def decide_partials(thresholds, tier_ids, n_tiers, c_lower,
                     c_upper_per_tier, active=None):
     """Per-shard partial sums of ``decide``'s reductions.

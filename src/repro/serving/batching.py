@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Sequence
 
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.cascade_tiers import BATCH_LADDER
 
@@ -40,4 +40,6 @@ def pad_batch(samples: list, bucket: int):
     n = len(samples)
     assert 0 < n <= bucket
     arrs = list(samples) + [samples[-1]] * (bucket - n)
-    return jnp.stack(arrs), n
+    # host-side assembly stays numpy: the batch crosses to the device
+    # as a jit argument (jnp.stack here was an eager per-bucket compile)
+    return np.stack([np.asarray(a) for a in arrs]), n

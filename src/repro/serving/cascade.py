@@ -216,9 +216,11 @@ def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
             for i, c in enumerate(clients):
                 c.threshold = float(th[i])
         if model_switching:
-            th = np.array([c.threshold for c in clients])
-            s = int(switching.decide(th, tier_ids, n_tiers, c_lower,
-                                     c_upper, active=active))
+            th = np.array([c.threshold for c in clients], np.float32)
+            s = int(switching.decide_jit(
+                th, np.asarray(tier_ids, np.int32), n_tiers,
+                np.float32(c_lower), np.asarray(c_upper, np.float32),
+                active=active))
             if s != 0 and engine.switch(s):
                 switches += 1
         timeline["t"].append(t)

@@ -72,6 +72,17 @@ class ServerEngine:
     """Batched cascade server: bounded queue, in-flight slot tracking,
     ladder-bucket dispatch, model switching."""
 
+    # lock map for the async transport (ROADMAP): attributes mutated
+    # from more than one call context, to be covered by the engine lock
+    # when dispatch and completion move to separate threads. The
+    # concurrency lint (tools/lint.py CC001/CC002) keeps this exact.
+    GUARDED_BY = {
+        "in_flight": "engine lock: step() acquires a slot, complete()"
+                     " releases it",
+        "_open": "engine lock: step() registers a batch id, complete()"
+                 " retires it",
+    }
+
     def __init__(self, served: Sequence[ServedModel], confidence="bvsb",
                  *, max_in_flight: int = 1,
                  queue: Optional[RequestQueue] = None):

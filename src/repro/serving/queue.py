@@ -40,6 +40,13 @@ class Request:
 
 
 class RequestQueue:
+    # lock map for the async transport (ROADMAP): the deque is mutated
+    # by producers (put) and the dispatcher (pop_batch); the future
+    # broker lock covers it. Kept exact by tools/lint.py CC001/CC002.
+    GUARDED_BY = {
+        "_q": "queue lock: put() appends/sheds, pop_batch() drains",
+    }
+
     def __init__(self, capacity: Optional[int] = None,
                  policy: str = "reject"):
         if capacity is not None and capacity < 1:

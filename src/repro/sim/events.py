@@ -300,9 +300,11 @@ def run(devices: List[DeviceRuntime], servers: Sequence[ServerProfile],
             for i, dev in enumerate(devices):
                 dev.threshold = float(th[i])
         if model_switching:
-            th = np.array([d.threshold for d in devices])
-            s = int(switching.decide(th, tier_ids, n_tiers, c_lower,
-                                     c_upper, active=active))
+            th = np.array([d.threshold for d in devices], np.float32)
+            s = int(switching.decide_jit(
+                th, np.asarray(tier_ids, np.int32), n_tiers,
+                np.float32(c_lower), np.asarray(c_upper, np.float32),
+                active=active))
             if s == -1 and server_idx > 0:
                 server_idx -= 1     # faster model
             elif s == 1 and server_idx < len(servers) - 1:

@@ -1,0 +1,57 @@
+"""Shared recompile-guard helpers over ``jaxsim.stats_snapshot()``.
+
+The suite pins the compile discipline in three places (sweep, lanes,
+serving) and each had grown its own copy of the same snapshot/diff
+boilerplate. Both helpers read the process-wide ``jaxsim.stats``
+counters (``cores_built`` ticks once per distinct static lane
+structure; ``backend_compiles`` counts XLA backend_compile events for
+*all* of jax via jax.monitoring, so any stray eager dispatch or
+jit-cache miss in the block is caught, not just lane cores).
+
+    with compile_guard.no_recompiles():
+        ...                    # warm-path calls: must not compile
+
+    with compile_guard.compile_counter() as c:
+        ...
+    assert c.backend_compiles <= 1
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.sim import jaxsim
+
+
+@dataclasses.dataclass
+class CompileDelta:
+    """Counter deltas over a ``compile_counter`` block (filled on exit)."""
+    cores_built: int = 0
+    backend_compiles: int = 0
+
+
+@contextlib.contextmanager
+def compile_counter():
+    """Yield a ``CompileDelta`` measuring the block's compile activity."""
+    delta = CompileDelta()
+    before = jaxsim.stats_snapshot()
+    try:
+        yield delta
+    finally:
+        after = jaxsim.stats_snapshot()
+        delta.cores_built = after["cores_built"] - before["cores_built"]
+        delta.backend_compiles = (after["backend_compiles"]
+                                  - before["backend_compiles"])
+
+
+@contextlib.contextmanager
+def no_recompiles():
+    """Assert the block builds no lane core and triggers no XLA
+    backend compile — the warm-path contract."""
+    with compile_counter() as delta:
+        yield delta
+    assert delta.cores_built == 0, \
+        f"block built {delta.cores_built} lane core(s); expected warm path"
+    assert delta.backend_compiles == 0, \
+        (f"block triggered {delta.backend_compiles} backend compile(s); "
+         f"expected warm path")

@@ -1,0 +1,8 @@
+"""HD001 corpus: eager jnp construction on the host dispatch path —
+a throwaway executable per call site x shape."""
+import jax.numpy as jnp
+
+
+def assemble(batch):
+    # BUG: host code should np.stack and cross the boundary once
+    return jnp.stack(batch)

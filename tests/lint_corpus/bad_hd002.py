@@ -1,0 +1,9 @@
+"""HD002 corpus: integer indexing of a device array in host code —
+an eager dynamic_slice compiled per fleet size."""
+import jax
+
+
+def read_threshold(values, device_id):
+    arr = jax.device_put(values)
+    # BUG: np.asarray(arr) once, then index the host copy
+    return float(arr[device_id])

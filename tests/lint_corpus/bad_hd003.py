@@ -1,0 +1,8 @@
+"""HD003 corpus: jax.jit created inside a factory with no memo — a
+fresh executable per call (the per-client leak)."""
+import jax
+
+
+def make_step(fn):
+    # BUG: hoist to module level or decorate the factory with lru_cache
+    return jax.jit(fn)

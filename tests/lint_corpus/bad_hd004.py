@@ -1,0 +1,11 @@
+"""HD004 corpus: host call into a traced scheduler kernel — op-soup
+eager dispatch of the whole update graph."""
+import numpy as np
+
+from repro.core import switching
+
+
+def host_decide(th, tier_ids, c_upper):
+    # BUG: call switching.decide_jit (the module's jitted wrapper)
+    return int(switching.decide(th, tier_ids, 2, np.float32(0.05),
+                                c_upper))

@@ -1,0 +1,28 @@
+"""LM001 corpus: a lane-carry write of real data that bypasses the
+active-lane gate — an inactive lane would keep stepping."""
+import jax
+import numpy as np
+
+
+def body(st):
+    act = st["active"]
+    gate = act.astype(st["t"].dtype)
+    t = st["t"] + 0.05 * gate                     # properly gated
+    pred = t.max() > 1.0
+    bump = jax.lax.cond(pred, lambda x: x + 1.0, lambda x: x,
+                        st["traces"]["sr"])
+    # BUG: real data, no dependence on the active predicate
+    frontier = st["t"] * 2.0
+    return {"active": act, "frontier": frontier, "t": t,
+            "traces": {"sr": bump}}
+
+
+LINT_LANE_ENTRY = {
+    "name": "corpus-unmasked-write",
+    "body": body,
+    "st0": {"active": np.ones(4, bool),
+            "frontier": np.zeros(4, np.float32),
+            "t": np.zeros(4, np.float32),
+            "traces": {"sr": np.zeros(4, np.float32)}},
+    "boundary_fields": ("t",),
+}

@@ -1,0 +1,31 @@
+"""LM002 corpus: the window-boundary cond reaches a carry leaf that is
+not a BOUNDARY_FIELD (nor a trace row)."""
+import jax
+import numpy as np
+
+
+def body(st):
+    act = st["active"]
+    gate = act.astype(st["t"].dtype)
+    t = st["t"] + 0.05 * gate
+    pred = t.max() > 1.0
+    # BUG: the boundary exchange writes 'frontier', which is not a
+    # declared boundary field
+    t2, frontier = jax.lax.cond(
+        pred,
+        lambda a, b: (a + 1.0, b * 0.0),
+        lambda a, b: (a, b),
+        t, st["frontier"])
+    return {"active": act, "frontier": frontier, "t": t2,
+            "traces": {"sr": st["traces"]["sr"]}}
+
+
+LINT_LANE_ENTRY = {
+    "name": "corpus-boundary-overreach",
+    "body": body,
+    "st0": {"active": np.ones(4, bool),
+            "frontier": np.zeros(4, np.float32),
+            "t": np.zeros(4, np.float32),
+            "traces": {"sr": np.zeros(4, np.float32)}},
+    "boundary_fields": ("t",),
+}

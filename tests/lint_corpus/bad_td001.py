@@ -1,0 +1,18 @@
+"""TD001 corpus: a float64 buffer reaches a traced entry point.
+
+With x64 disabled JAX canonicalizes the f64 away at trace time, so the
+x64 trace pass is what catches this — exactly the drift TD001 exists
+for.
+"""
+import numpy as np
+
+
+def _build():
+    def fn(x, big):
+        return x.sum() + big.sum().astype(x.dtype)
+    return fn, (np.zeros(4, np.float32), np.zeros(4, np.float64)), {}
+
+
+LINT_TRACE_ENTRIES = [
+    {"name": "corpus-f64-entry", "build": _build, "x64": True},
+]

@@ -1,0 +1,16 @@
+"""TD002 corpus: a python scalar reaches the jit boundary, giving the
+entry a weak-typed aval — a jit-cache key split against its
+strongly-typed twin."""
+import numpy as np
+
+
+def _build():
+    def fn(x, scale):
+        return x * scale
+    # BUG: 0.5 should be np.float32(0.5)
+    return fn, (np.zeros(4, np.float32), 0.5), {}
+
+
+LINT_TRACE_ENTRIES = [
+    {"name": "corpus-weak-entry", "build": _build},
+]

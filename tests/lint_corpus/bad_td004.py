@@ -1,0 +1,14 @@
+"""TD004 corpus: a donated buffer the traced program never reads —
+the caller loses the buffer for nothing (donation theater)."""
+import numpy as np
+
+
+def _build():
+    def fn(x, dead):
+        return x + 1.0
+    return fn, (np.zeros(4, np.float32), np.zeros(8, np.float32)), {}
+
+
+LINT_TRACE_ENTRIES = [
+    {"name": "corpus-dead-donate", "build": _build, "donate": (1,)},
+]

@@ -33,6 +33,7 @@ except ImportError:  # deterministic mini engine from conftest
 
 import jax
 
+import compile_guard
 from lane_utils import SCALARS, assert_lane_bitwise, pack_lanes
 from repro.configs.cascade_tiers import SERVER_PROFILES
 from repro.sim import jaxsim, synthetic
@@ -259,15 +260,12 @@ def test_scenario_values_are_traced():
     which never feeds the duration)."""
     specs, streams, lat, slo, kw = pack(CHURN_MIX)
     jaxsim.run_sweep(specs, streams, lat, slo, SERVERS, **kw)
-    warm = jaxsim.stats_snapshot()
     kw2 = dict(kw, leave_t=np.where(np.isfinite(kw["leave_t"]),
                                     kw["leave_t"] * 0.9, np.inf))
     streams2 = {k: np.array(v) for k, v in streams.items()}
-    jaxsim.run_sweep(specs, streams2, np.array(lat), np.array(slo),
-                     SERVERS, **kw2)
-    after = jaxsim.stats_snapshot()
-    assert after["cores_built"] == warm["cores_built"]
-    assert after["backend_compiles"] == warm["backend_compiles"]
+    with compile_guard.no_recompiles():
+        jaxsim.run_sweep(specs, streams2, np.array(lat), np.array(slo),
+                         SERVERS, **kw2)
 
 
 def test_junk_beyond_lane_width_is_inert():
@@ -293,7 +291,6 @@ def test_one_core_serves_heterogeneous_mixes():
     are traced — remixing them at a fixed shape must not compile."""
     specs, streams, lat, slo, kw = pack(MIX)
     jaxsim.run_sweep(specs, streams, lat, slo, SERVERS, **kw)
-    warm = jaxsim.stats_snapshot()
     # same shapes, different lane mix: rotate schedulers, change device
     # counts (within the packed width), drop the offline windows
     remix = (
@@ -304,10 +301,8 @@ def test_one_core_serves_heterogeneous_mixes():
         dataclasses.replace(MIX[4], scheduler="multitasc++", n=1),
     )
     specs_r, streams_r, lat_r, slo_r, kw_r = pack(remix)
-    jaxsim.run_sweep(specs_r, streams_r, lat_r, slo_r, SERVERS, **kw_r)
-    after = jaxsim.stats_snapshot()
-    assert after["cores_built"] == warm["cores_built"]
-    assert after["backend_compiles"] == warm["backend_compiles"]
+    with compile_guard.no_recompiles():
+        jaxsim.run_sweep(specs_r, streams_r, lat_r, slo_r, SERVERS, **kw_r)
 
 
 def test_b1_rides_the_same_core():
@@ -325,17 +320,14 @@ def test_b1_rides_the_same_core():
     os_, of_ = os_[order], of_[order]
     out = jaxsim.run(spec, streams, lat, slo, SERVERS, tier_ids=tier,
                      c_upper=cu, offline_start=os_, offline_for=of_)
-    warm = jaxsim.stats_snapshot()
     # B=1 points with different traced values — including a smaller
     # device count (inputs sliced to the narrower width): zero compiles,
     # because the device axis pads to the same bucket either way
     spec2 = dataclasses.replace(spec, scheduler="static", n_devices=3)
-    jaxsim.run(spec2, {k: v[:3] for k, v in streams.items()}, lat[:3],
-               slo[:3], SERVERS, tier_ids=tier[:3], c_upper=cu,
-               offline_start=os_[:3], offline_for=of_[:3])
-    after = jaxsim.stats_snapshot()
-    assert after["cores_built"] == warm["cores_built"]
-    assert after["backend_compiles"] == warm["backend_compiles"]
+    with compile_guard.no_recompiles():
+        jaxsim.run(spec2, {k: v[:3] for k, v in streams.items()}, lat[:3],
+                   slo[:3], SERVERS, tier_ids=tier[:3], c_upper=cu,
+                   offline_start=os_[:3], offline_for=of_[:3])
     assert int(out["completed"]) == case.n * 48
 
 

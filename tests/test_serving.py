@@ -1,4 +1,5 @@
 """Serving-layer tests: queue, dynamic batching, engine, live cascade."""
+import compile_guard
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,7 +22,7 @@ from repro.serving.client import DeviceClient
 from repro.serving.engine import Request, ServedModel, ServerEngine
 from repro.serving.queue import RequestQueue
 from repro.serving.replay import replay_cascade
-from repro.sim import jaxsim, synthetic
+from repro.sim import synthetic
 from repro.sim.events import make_scheduler
 
 
@@ -273,17 +274,16 @@ def test_client_fleet_shares_one_executable(tiny_pair):
     the identical forward once per client."""
     (lm, lp, lcfg), _ = tiny_pair
     executables.clear_cache()
-    before = jaxsim.stats_snapshot()["backend_compiles"]
-    clients = [DeviceClient(i, lm, lp, DEVICE_PROFILES["low"], 0.15, 1.5,
-                            0.5) for i in range(12)]
-    tok = np.zeros(8, np.int32)
-    for c in clients:
-        c.run_local(tok)
+    with compile_guard.compile_counter() as delta:
+        clients = [DeviceClient(i, lm, lp, DEVICE_PROFILES["low"], 0.15,
+                                1.5, 0.5) for i in range(12)]
+        tok = np.zeros(8, np.int32)
+        for c in clients:
+            c.run_local(tok)
     stats = executables.cache_stats()
     assert stats["executables"] == 1 and stats["misses"] == 1
     assert stats["hits"] == 11               # 11 clients reused it
-    compiles = jaxsim.stats_snapshot()["backend_compiles"] - before
-    assert compiles <= 1                     # seed paid 12
+    assert delta.backend_compiles <= 1       # seed paid 12
 
 
 def test_engine_compiles_bounded_by_buckets(tiny_pair):
@@ -306,18 +306,16 @@ def test_engine_compiles_bounded_by_buckets(tiny_pair):
 
     engine = ServerEngine([ServedModel("fast", hm, hp, prof),
                            ServedModel("heavy", hm, hp, prof)])
-    before = jaxsim.stats_snapshot()["backend_compiles"]
-    drive(engine, 10)                        # buckets 8, then 2
+    with compile_guard.compile_counter() as delta:
+        drive(engine, 10)                    # buckets 8, then 2
     assert set(engine.batch_history) == {8, 2}
-    first = jaxsim.stats_snapshot()["backend_compiles"] - before
-    assert first <= 2                        # one per distinct bucket
+    assert delta.backend_compiles <= 2       # one per distinct bucket
 
-    before = jaxsim.stats_snapshot()["backend_compiles"]
     engine2 = ServerEngine([ServedModel("fast", hm, hp, prof),
                             ServedModel("heavy", hm, hp, prof)])
     engine2.switch(+1)                       # other ladder entry
-    drive(engine2, 10)
-    assert jaxsim.stats_snapshot()["backend_compiles"] == before
+    with compile_guard.no_recompiles():
+        drive(engine2, 10)
     assert executables.cache_stats()["executables"] == 2
 
 

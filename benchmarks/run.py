@@ -75,8 +75,8 @@ def main() -> None:
                             fig11_heterogeneous, fig11_lanes,
                             fig11_scaleout, fig15_transformers,
                             fig17_switching, fig19_intermittent,
-                            fig_churn, fig_scale, fig_serving,
-                            kernels_bench)
+                            fig_async, fig_churn, fig_scale,
+                            fig_serving, kernels_bench)
     from repro.sim import jaxsim
     modules = {
         "fig4": fig4_homogeneous,
@@ -91,6 +91,7 @@ def main() -> None:
         "fig_churn": fig_churn,
         "fig_scale": fig_scale,
         "fig_serving": fig_serving,
+        "fig_async": fig_async,
         "ablation": ablation_components,
         "kernels": kernels_bench,
     }

@@ -105,6 +105,10 @@ def all_rules() -> List[RuleSpec]:
         RuleSpec("CC002", concurrency_rules.FAMILY, Severity.ERROR,
                  "GUARDED_BY lock map is exact (no stale entries)",
                  concurrency_rules.rule_cc002),
+        RuleSpec("CC003", concurrency_rules.FAMILY, Severity.ERROR,
+                 "every GUARDED_BY entry names a real lock held at "
+                 "each mutation",
+                 concurrency_rules.rule_cc003),
     ]
 
 

@@ -8,9 +8,10 @@ declaring ``x64=True``) additionally under ``jax.experimental
 JAX *canonicalizes* every float64 away at trace time, so code that
 relies on that canonicalization instead of explicit ``float32`` dtypes
 looks clean until someone flips ``JAX_ENABLE_X64`` — tracing under x64
-surfaces exactly those sites. The big lane core is traced under the
-standard config only (its x64-hardening is tracked in ROADMAP.md); the
-scheduler kernels and the serving classify forward must stay x64-clean.
+surfaces exactly those sites. The big lane core, the scheduler kernels
+and the serving classify forward all trace under the x64 pass: the
+core's boundary-cond branch dtypes and scatter indices are explicit
+(``_ratio32`` / ``dtype=jnp.int32``), so enable_x64 changes nothing.
 """
 from __future__ import annotations
 
@@ -198,7 +199,7 @@ def _lane_core_entry(with_arrive: bool) -> TraceEntry:
     # the conf/cl/ch/arrive stream buffers
     return TraceEntry(
         name="lane-core-arrive" if with_arrive else "lane-core",
-        build=build, donate=(2, 3, 4, 5))
+        build=build, donate=(2, 3, 4, 5), x64=True)
 
 
 def _scheduler_entries() -> List[TraceEntry]:

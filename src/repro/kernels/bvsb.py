@@ -73,15 +73,22 @@ def bvsb(logits, *, interpret=False):
     b, v = logits.shape
     bb = min(BB, b)
     bv = min(BV, v)
-    assert b % bb == 0 and v % bv == 0, (b, v)
-    return pl.pallas_call(
+    assert v % bv == 0, (b, v)
+    # ragged batches (a 12-row pop off an unsorted ladder, a drained
+    # queue tail) round up to the next row-tile multiple: the pad rows
+    # are zeros — harmless to the online max/sum — cost at most one
+    # extra grid row, and are sliced off before returning
+    pad = -b % bb
+    x = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    bp = b + pad
+    out, top1 = pl.pallas_call(
         _bvsb_kernel,
-        grid=(b // bb, v // bv),
+        grid=(bp // bb, v // bv),
         in_specs=[pl.BlockSpec((bb, bv), lambda i, j: (i, j))],
         out_specs=[pl.BlockSpec((bb,), lambda i, j: (i,)),
                    pl.BlockSpec((bb,), lambda i, j: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32),
-                   jax.ShapeDtypeStruct((b,), jnp.int32)],
+        out_shape=[jax.ShapeDtypeStruct((bp,), jnp.float32),
+                   jax.ShapeDtypeStruct((bp,), jnp.int32)],
         scratch_shapes=[
             pltpu.VMEM((bb,), jnp.float32),
             pltpu.VMEM((bb,), jnp.float32),
@@ -89,4 +96,5 @@ def bvsb(logits, *, interpret=False):
             pltpu.VMEM((bb,), jnp.int32),
         ],
         interpret=interpret,
-    )(logits)
+    )(x)
+    return (out[:b], top1[:b]) if pad else (out, top1)

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import threading
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -67,6 +68,141 @@ class CascadeResult:
     dropped: int                   # requests shed/rejected by the queue
     queue_peak: int                # realized queue high-water mark
     last_completion_t: float
+
+
+class CascadeBook:
+    """Completion/metric bookkeeping shared by the virtual-clock loop
+    (``run_cascade``) and the wall-clock transport
+    (``repro.serving.transport``).
+
+    Thread-safe: ``complete`` is called from the ingestion thread
+    (device-local completions) *and* the dispatch thread (server
+    completions, shed victims) under the async transport, so every
+    counter update runs under ``_lock``. The lock is a leaf — no other
+    lock is ever acquired while holding it.
+    """
+
+    GUARDED_BY = {
+        "win_met": "_lock: complete() accrues, window_sr() resets",
+        "win_total": "_lock: complete() accrues, window_sr() resets",
+    }
+
+    def __init__(self, clients: List[DeviceClient], have_labels: bool):
+        n = len(clients)
+        self._lock = threading.Lock()
+        self.clients = clients
+        self.have_labels = have_labels
+        self.met = np.zeros(n, int)
+        self.total = np.zeros(n, int)
+        self.correct = np.zeros(n, int)
+        self.win_met = np.zeros(n, int)
+        self.win_total = np.zeros(n, int)
+        self.fwd_count = np.zeros(n, int)
+        self.drop_count = np.zeros(n, int)
+        self.completed = 0
+        self.switches = 0
+        self.last_done_t = 0.0
+        self.win_sr_last = np.full(n, 100.0)
+        self.timeline: Dict[str, list] = {
+            "t": [], "thresholds": [], "model": [], "sr": [],
+            "active": [], "forwarded": []}
+
+    def complete(self, i: int, latency: float, pred, label, t: float):
+        with self._lock:
+            self.clients[i].record_completion(latency)
+            ok = latency <= self.clients[i].slo
+            self.met[i] += ok
+            self.win_met[i] += ok
+            self.total[i] += 1
+            self.win_total[i] += 1
+            self.completed += 1
+            self.last_done_t = max(self.last_done_t, t)
+            if label is not None:
+                self.correct[i] += int(pred == label)
+
+    def drop(self, req: Request, t: float, scheduler=None):
+        """Backpressure fallback: the queue's victim completes with the
+        local prediction its device already computed."""
+        j, label, local_pred = req.payload
+        self.drop_count[req.device_id] += 1
+        self.complete(req.device_id, t - req.start_time, local_pred,
+                      label, t)
+        hook = getattr(scheduler, "on_queue_drop", None)
+        if hook is not None:
+            hook(req.device_id)
+
+    def window_sr(self, i: int) -> float:
+        """Read-and-reset device ``i``'s window SLO rate (one window
+        boundary's worth of completions)."""
+        with self._lock:
+            sr = 100.0 if self.win_total[i] == 0 else \
+                100.0 * self.win_met[i] / self.win_total[i]
+            self.win_sr_last[i] = sr
+            self.win_met[i] = 0
+            self.win_total[i] = 0
+        return sr
+
+    def result(self, engine: ServerEngine) -> CascadeResult:
+        n = len(self.clients)
+        met, total, correct = self.met, self.total, self.correct
+        per_sr = np.where(total > 0,
+                          100.0 * met / np.maximum(total, 1), 100.0)
+        per_acc = np.where(total > 0,
+                           correct / np.maximum(total, 1), 1.0)
+        return CascadeResult(
+            sr=float(100.0 * met.sum() / max(total.sum(), 1)),
+            accuracy=(float(per_acc.mean()) if self.have_labels
+                      else float("nan")),
+            throughput=float(total.sum() / max(self.last_done_t, 1e-9)),
+            forwarded_frac=float(self.fwd_count.sum()
+                                 / max(total.sum(), 1)),
+            per_device_sr=per_sr,
+            per_device_acc=(per_acc if self.have_labels
+                            else np.full(n, np.nan)),
+            timeline=self.timeline,
+            switches=self.switches,
+            completed=int(self.completed),
+            dropped=int(self.drop_count.sum()),
+            queue_peak=int(engine.queue.peak),
+            last_completion_t=float(self.last_done_t),
+        )
+
+
+def window_step(t: float, *, book: CascadeBook,
+                clients: List[DeviceClient], engine: ServerEngine,
+                scheduler, active: np.ndarray, model_switching: bool,
+                tier_ids, n_tiers: int, c_lower: float, c_upper) -> None:
+    """One window boundary — scheduler reports, MultiTASC batch update,
+    the switching decision, and the timeline row. Shared verbatim by
+    the sequential loop and the async transport (where it runs in the
+    ingestion thread with the dispatch thread parked at the barrier, so
+    scheduler/threshold/engine state is quiescent)."""
+    if hasattr(scheduler, "set_active"):
+        scheduler.set_active(active)
+    for i, c in enumerate(clients):
+        if not active[i]:
+            continue
+        c.threshold = scheduler.report(i, book.window_sr(i))
+    if isinstance(scheduler, MultiTASC):
+        scheduler.on_window(active=active)
+        th = np.asarray(scheduler.thresholds())
+        for i, c in enumerate(clients):
+            c.threshold = float(th[i])
+    if model_switching:
+        th = np.array([c.threshold for c in clients], np.float32)
+        s = int(switching.decide_jit(
+            th, np.asarray(tier_ids, np.int32), n_tiers,
+            np.float32(c_lower), np.asarray(c_upper, np.float32),
+            active=active))
+        if s != 0 and engine.switch(s):
+            book.switches += 1
+    tl = book.timeline
+    tl["t"].append(t)
+    tl["thresholds"].append([c.threshold for c in clients])
+    tl["model"].append(engine.active.name)
+    tl["sr"].append(book.win_sr_last.copy())
+    tl["active"].append(float(active.mean()))
+    tl["forwarded"].append(int(book.fwd_count.sum()))
 
 
 def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
@@ -116,42 +252,7 @@ def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
     push(window, EV_WINDOW, None)
 
     cursor = np.zeros(n, int)
-    met = np.zeros(n, int)
-    total = np.zeros(n, int)
-    correct = np.zeros(n, int)
-    win_met = np.zeros(n, int)
-    win_total = np.zeros(n, int)
-    fwd_count = np.zeros(n, int)
-    drop_count = np.zeros(n, int)
-    completed = 0
-    switches = 0
-    last_done_t = 0.0
-    timeline = {"t": [], "thresholds": [], "model": [], "sr": [],
-                "active": [], "forwarded": []}
-    win_sr_last = np.full(n, 100.0)
-
-    def complete(i, latency, pred, label, t):
-        nonlocal last_done_t, completed
-        clients[i].record_completion(latency)
-        ok = latency <= clients[i].slo
-        met[i] += ok
-        win_met[i] += ok
-        total[i] += 1
-        win_total[i] += 1
-        completed += 1
-        last_done_t = max(last_done_t, t)
-        if label is not None:
-            correct[i] += int(pred == label)
-
-    def drop(req: Request, t):
-        """Backpressure fallback: the queue's victim completes with the
-        local prediction its device already computed."""
-        j, label, local_pred = req.payload
-        drop_count[req.device_id] += 1
-        complete(req.device_id, t - req.start_time, local_pred, label, t)
-        hook = getattr(scheduler, "on_queue_drop", None)
-        if hook is not None:
-            hook(req.device_id)
+    book = CascadeBook(clients, have_labels=labels is not None)
 
     def dispatch(t):
         """Drain: launch batches while the engine has free slots and the
@@ -177,14 +278,14 @@ def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
         conf, pred, do_fwd = clients[i].run_local(tokens)
         label = labels[i][j] if labels is not None else None
         if do_fwd:
-            fwd_count[i] += 1
+            book.fwd_count[i] += 1
             victim = engine.submit(Request(
                 i, tokens, t, t - clients[i].profile.latency,
                 payload=(j, label, pred)))
             if victim is not None:
-                drop(victim, t)
+                book.drop(victim, t, scheduler)
         else:
-            complete(i, clients[i].profile.latency, pred, label, t)
+            book.complete(i, clients[i].profile.latency, pred, label, t)
         if cursor[i] < len(datasets[i]):
             push(max(t, arrival(i, cursor[i])) + clients[i].profile.latency,
                  EV_DEV, i)
@@ -193,42 +294,15 @@ def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
         engine.complete(out)
         for r, pred in zip(out["requests"], out["pred"]):
             j, label, _local = r.payload
-            complete(r.device_id, t - r.start_time, int(pred), label, t)
+            book.complete(r.device_id, t - r.start_time, int(pred),
+                          label, t)
         dispatch(t)
 
     def on_window(t):
-        nonlocal switches
-        active = joined & ~departed
-        if hasattr(scheduler, "set_active"):
-            scheduler.set_active(active)
-        for i, c in enumerate(clients):
-            if not active[i]:
-                continue
-            sr = 100.0 if win_total[i] == 0 else \
-                100.0 * win_met[i] / win_total[i]
-            win_sr_last[i] = sr
-            win_met[i] = 0
-            win_total[i] = 0
-            c.threshold = scheduler.report(i, sr)
-        if isinstance(scheduler, MultiTASC):
-            scheduler.on_window(active=active)
-            th = np.asarray(scheduler.thresholds())
-            for i, c in enumerate(clients):
-                c.threshold = float(th[i])
-        if model_switching:
-            th = np.array([c.threshold for c in clients], np.float32)
-            s = int(switching.decide_jit(
-                th, np.asarray(tier_ids, np.int32), n_tiers,
-                np.float32(c_lower), np.asarray(c_upper, np.float32),
-                active=active))
-            if s != 0 and engine.switch(s):
-                switches += 1
-        timeline["t"].append(t)
-        timeline["thresholds"].append([c.threshold for c in clients])
-        timeline["model"].append(engine.active.name)
-        timeline["sr"].append(win_sr_last.copy())
-        timeline["active"].append(float(active.mean()))
-        timeline["forwarded"].append(int(fwd_count.sum()))
+        window_step(t, book=book, clients=clients, engine=engine,
+                    scheduler=scheduler, active=joined & ~departed,
+                    model_switching=model_switching, tier_ids=tier_ids,
+                    n_tiers=n_tiers, c_lower=c_lower, c_upper=c_upper)
         if any(cursor[i] < len(datasets[i]) for i in range(n)) \
                 or len(engine.queue) or engine.in_flight:
             push(t + window, EV_WINDOW, None)
@@ -255,21 +329,4 @@ def run_cascade(clients: List[DeviceClient], engine: ServerEngine,
         elif kind == EV_WINDOW:
             on_window(t)
 
-    per_sr = np.where(total > 0, 100.0 * met / np.maximum(total, 1), 100.0)
-    have_labels = labels is not None
-    per_acc = np.where(total > 0, correct / np.maximum(total, 1), 1.0)
-    return CascadeResult(
-        sr=float(100.0 * met.sum() / max(total.sum(), 1)),
-        accuracy=float(per_acc.mean()) if have_labels else float("nan"),
-        throughput=float(total.sum() / max(last_done_t, 1e-9)),
-        forwarded_frac=float(fwd_count.sum() / max(total.sum(), 1)),
-        per_device_sr=per_sr,
-        per_device_acc=(per_acc if have_labels
-                        else np.full(n, np.nan)),
-        timeline=timeline,
-        switches=switches,
-        completed=int(completed),
-        dropped=int(drop_count.sum()),
-        queue_peak=int(engine.queue.peak),
-        last_completion_t=float(last_done_t),
-    )
+    return book.result(engine)

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -70,16 +71,28 @@ class ServedModel:
 
 class ServerEngine:
     """Batched cascade server: bounded queue, in-flight slot tracking,
-    ladder-bucket dispatch, model switching."""
+    ladder-bucket dispatch, model switching.
 
-    # lock map for the async transport (ROADMAP): attributes mutated
-    # from more than one call context, to be covered by the engine lock
-    # when dispatch and completion move to separate threads. The
-    # concurrency lint (tools/lint.py CC001/CC002) keeps this exact.
+    Thread safety / lock order
+    --------------------------
+    ``step_begin`` (slot + batch assembly) and ``complete`` are
+    linearizable under concurrent callers: both hold ``_lock`` for their
+    whole critical section, so a slot can be acquired/released exactly
+    once per batch id, and the capacity check cannot race the increment.
+    ``execute`` (the model forward) takes no lock at all — the async
+    transport (serving/transport.py) runs it on worker threads so host
+    batching overlaps accelerator execution. The documented lock order
+    is ``ServerEngine._lock`` -> ``RequestQueue._lock`` (step_begin pops
+    the queue while holding the engine lock); never acquire the engine
+    lock while holding the queue lock.
+    """
+
+    # Lock map, kept exact by tools/lint.py CC001/CC002; CC003 checks
+    # the named lock exists and wraps every mutation of these attrs.
     GUARDED_BY = {
-        "in_flight": "engine lock: step() acquires a slot, complete()"
+        "in_flight": "_lock: step_begin() acquires a slot, complete()"
                      " releases it",
-        "_open": "engine lock: step() registers a batch id, complete()"
+        "_open": "_lock: step_begin() registers a batch id, complete()"
                  " retires it",
     }
 
@@ -95,6 +108,7 @@ class ServerEngine:
         self.max_in_flight = int(max_in_flight)
         self.in_flight = 0
         self.batch_history: List[int] = []
+        self._lock = threading.Lock()
         self._batch_ids = itertools.count()
         self._open: set = set()
 
@@ -122,23 +136,51 @@ class ServerEngine:
     def slots_free(self) -> int:
         return self.max_in_flight - self.in_flight
 
-    def step(self, now: float) -> Optional[dict]:
-        """Dispatch one dynamic batch if a slot is free and the ladder
-        admits one; None otherwise (idle queue, or at capacity — the
-        engine itself refuses to oversubscribe its slots).
+    def step_begin(self, now: float) -> Optional[dict]:
+        """Acquire a slot and assemble one dynamic batch — no forward.
 
-        Returns {"requests", "conf", "pred", "latency", "finish",
-        "model", "batch_id"}; the caller must hand the record back via
-        ``complete`` once its ``finish`` time is reached.
+        The whole section holds the engine lock: capacity check, bucket
+        sizing, queue pop and batch-id registration are one atomic
+        dispatch decision (concurrent callers each get disjoint
+        requests, and the slot bound can never be oversubscribed). The
+        returned record has ``conf``/``pred`` unset until ``execute``
+        fills them; None when the queue is idle or every slot is busy.
         """
-        if self.in_flight >= self.max_in_flight:
-            return None
-        sm = self.active
-        bucket = pick_bucket(len(self.queue), sm.profile.max_batch)
-        if bucket == 0:
-            return None
-        reqs = self.queue.pop_batch(bucket)
-        self.batch_history.append(len(reqs))
+        with self._lock:
+            if self.in_flight >= self.max_in_flight:
+                return None
+            sm = self.active
+            bucket = pick_bucket(len(self.queue), sm.profile.max_batch)
+            if bucket == 0:
+                return None
+            reqs = self.queue.pop_batch(bucket)
+            self.batch_history.append(len(reqs))
+            lat = sm.profile.batch_latency(bucket)
+            self.in_flight += 1
+            bid = next(self._batch_ids)
+            self._open.add(bid)
+            return {
+                "requests": reqs,
+                "bucket": bucket,
+                "conf": None,
+                "pred": None,
+                "latency": lat,
+                "finish": now + lat,
+                "model": sm.name,
+                "batch_id": bid,
+                "_served": sm,
+            }
+
+    def execute(self, record: dict) -> dict:
+        """Run the forward for a dispatched record, filling ``conf`` /
+        ``pred``. Lock-free by design: the async transport calls this on
+        accelerator worker threads while ``step_begin`` keeps assembling
+        the next batch on the dispatch thread — the overlap the
+        virtual-clock loop cannot express. The served model is pinned at
+        dispatch time, so a concurrent ``switch`` never retargets an
+        in-flight batch."""
+        sm = record.pop("_served")
+        reqs = record["requests"]
         if sm.oracle is not None:
             conf, pred = sm.oracle(reqs)
             conf, pred = np.asarray(conf), np.asarray(pred)
@@ -147,28 +189,37 @@ class ServerEngine:
             # compile-free, so dispatch costs exactly the per-bucket
             # classify executable
             batch = np.stack([np.asarray(r.sample) for r in reqs])
-            fn = classify_fn(sm.model, sm.params, bucket, self.confidence)
+            fn = classify_fn(sm.model, sm.params, record["bucket"],
+                             self.confidence)
             conf, pred = fn(sm.params, batch)
             conf, pred = np.asarray(conf), np.asarray(pred)
-        lat = sm.profile.batch_latency(bucket)
-        self.in_flight += 1
-        bid = next(self._batch_ids)
-        self._open.add(bid)
-        return {
-            "requests": reqs,
-            "conf": conf[:len(reqs)],
-            "pred": pred[:len(reqs)],
-            "latency": lat,
-            "finish": now + lat,
-            "model": sm.name,
-            "batch_id": bid,
-        }
+        record["conf"] = conf[:len(reqs)]
+        record["pred"] = pred[:len(reqs)]
+        return record
+
+    def step(self, now: float) -> Optional[dict]:
+        """Dispatch one dynamic batch if a slot is free and the ladder
+        admits one; None otherwise (idle queue, or at capacity — the
+        engine itself refuses to oversubscribe its slots).
+
+        Returns {"requests", "conf", "pred", "latency", "finish",
+        "model", "batch_id"}; the caller must hand the record back via
+        ``complete`` once its ``finish`` time is reached. Equivalent to
+        ``step_begin`` + ``execute`` inline — the synchronous
+        virtual-clock path.
+        """
+        record = self.step_begin(now)
+        if record is None:
+            return None
+        return self.execute(record)
 
     def complete(self, out: dict) -> None:
         """Mark a dispatched batch finished, freeing its slot. Each
-        record may complete exactly once."""
+        record may complete exactly once (atomically enforced: two
+        threads racing the same record — one wins, one raises)."""
         bid = out["batch_id"]
-        if bid not in self._open:
-            raise ValueError(f"batch {bid} is not in flight")
-        self._open.remove(bid)
-        self.in_flight -= 1
+        with self._lock:
+            if bid not in self._open:
+                raise ValueError(f"batch {bid} is not in flight")
+            self._open.remove(bid)
+            self.in_flight -= 1

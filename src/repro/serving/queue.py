@@ -24,6 +24,7 @@ backpressure telemetry.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 from typing import Any, Optional
 
@@ -40,11 +41,14 @@ class Request:
 
 
 class RequestQueue:
-    # lock map for the async transport (ROADMAP): the deque is mutated
-    # by producers (put) and the dispatcher (pop_batch); the future
-    # broker lock covers it. Kept exact by tools/lint.py CC001/CC002.
+    # Lock map (kept exact by tools/lint.py CC001/CC002, and CC003
+    # checks the named lock is real and held): the deque is mutated by
+    # producers (put, from the ingestion thread) and the dispatcher
+    # (pop_batch, from the dispatch thread under the engine lock).
+    # ``_lock`` is a leaf in the documented lock order — see
+    # serving/transport.py — it never calls out while held.
     GUARDED_BY = {
-        "_q": "queue lock: put() appends/sheds, pop_batch() drains",
+        "_q": "_lock: put() appends/sheds, pop_batch() drains",
     }
 
     def __init__(self, capacity: Optional[int] = None,
@@ -59,27 +63,33 @@ class RequestQueue:
         self.n_rejected = 0      # arrivals refused admission ("reject")
         self.n_shed = 0          # queued heads displaced ("shed_oldest")
         self.peak = 0            # realized high-water mark
+        self._lock = threading.Lock()
         self._q: deque[Request] = deque()
 
     def put(self, req: Request) -> Optional[Request]:
         """Admit ``req``; returns the dropped request under backpressure
         (``req`` itself when rejecting, the displaced head when
-        shedding) or ``None`` when nothing was dropped."""
-        if self.capacity is not None and len(self._q) >= self.capacity:
-            if self.policy == "reject":
-                self.n_rejected += 1
-                return req
-            dropped = self._q.popleft()
-            self.n_shed += 1
+        shedding) or ``None`` when nothing was dropped. Linearizable:
+        the capacity check and the append/shed are one atomic section,
+        so concurrent producers can neither oversubscribe the bound nor
+        shed the same head twice."""
+        with self._lock:
+            if self.capacity is not None and len(self._q) >= self.capacity:
+                if self.policy == "reject":
+                    self.n_rejected += 1
+                    return req
+                dropped = self._q.popleft()
+                self.n_shed += 1
+                self._q.append(req)
+                return dropped
             self._q.append(req)
-            return dropped
-        self._q.append(req)
-        self.peak = max(self.peak, len(self._q))
-        return None
+            self.peak = max(self.peak, len(self._q))
+            return None
 
     def pop_batch(self, max_n: int) -> list[Request]:
-        n = min(max_n, len(self._q))
-        return [self._q.popleft() for _ in range(n)]
+        with self._lock:
+            n = min(max_n, len(self._q))
+            return [self._q.popleft() for _ in range(n)]
 
     def __len__(self) -> int:
         return len(self._q)

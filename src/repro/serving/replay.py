@@ -44,7 +44,13 @@ from repro.core.slo import WindowedSLOTracker
 from repro.serving.cascade import CascadeResult, run_cascade
 from repro.serving.engine import ServedModel, ServerEngine
 from repro.serving.queue import RequestQueue
+from repro.serving.transport import run_transport
 from repro.sim import events, jaxsim
+
+# transport name -> cascade driver; "event" is the single-thread
+# virtual-clock loop, "async" the wall-clock threaded transport (same
+# semantics, overlapped execution — see repro.serving.transport)
+TRANSPORTS = {"event": run_cascade, "async": run_transport}
 
 # documented sim-vs-serving tolerances, set like tests/test_differential
 # TOL: just above the maxima observed over the scenario sweeps (static is
@@ -110,13 +116,16 @@ def replay_cascade(scheduler_name: str, streams: Dict, latencies, slos,
                    model_switching: bool = False, tier_ids=None,
                    c_upper=None, join_t=None, leave_t=None,
                    max_in_flight: int = 1,
-                   queue: Optional[RequestQueue] = None) -> CascadeResult:
+                   queue: Optional[RequestQueue] = None,
+                   transport: str = "event") -> CascadeResult:
     """Replay a synthetic scenario through the live serving path.
 
     ``streams``: the ``jaxsim.run`` dict — ``confidence``/
     ``correct_light`` (N, S), ``correct_heavy`` (N, S, P) and optional
     ``arrive`` (N, S) — plus per-device ``latencies``/``slos`` (N,) and
     the server profile ladder. Returns the live ``CascadeResult``.
+    ``transport`` picks the driver (``TRANSPORTS``): the virtual-clock
+    event loop or the wall-clock async transport.
     """
     conf = np.asarray(streams["confidence"], np.float32)
     cl = np.asarray(streams["correct_light"])
@@ -139,7 +148,7 @@ def replay_cascade(scheduler_name: str, streams: Dict, latencies, slos,
         static_threshold=static_threshold)
     datasets = [np.arange(s)] * n
     labels = [np.ones(s, np.int64)] * n
-    return run_cascade(
+    return TRANSPORTS[transport](
         clients, engine, sched, datasets, labels, window=window,
         model_switching=model_switching, tier_ids=tier_ids,
         c_upper=c_upper, join_t=join_t, leave_t=leave_t,
@@ -151,8 +160,9 @@ def serving_vs_sim(scheduler_name: str, streams: Dict, latencies, slos,
                    window: float = 1.5, init_threshold: float = 0.5,
                    static_threshold: float = 0.35,
                    model_switching: bool = False, tier_ids=None,
-                   c_upper=None, join_t=None,
-                   leave_t=None) -> Tuple[CascadeResult, Dict, Dict]:
+                   c_upper=None, join_t=None, leave_t=None,
+                   transport: str = "event") \
+        -> Tuple[CascadeResult, Dict, Dict]:
     """Run one scenario through BOTH the live serving path and the
     vectorized simulator; returns ``(live, sim, deltas)``.
 
@@ -167,7 +177,8 @@ def serving_vs_sim(scheduler_name: str, streams: Dict, latencies, slos,
         scheduler_name, streams, latencies, slos, servers, window=window,
         init_threshold=init_threshold, static_threshold=static_threshold,
         model_switching=model_switching, tier_ids=tier_ids,
-        c_upper=c_upper, join_t=join_t, leave_t=leave_t)
+        c_upper=c_upper, join_t=join_t, leave_t=leave_t,
+        transport=transport)
     spec = jaxsim.JaxSimSpec(
         scheduler=scheduler_name, n_devices=n, samples_per_device=s,
         window=window, init_threshold=init_threshold,

@@ -823,6 +823,15 @@ BOUNDARY_FIELDS = ("thresh", "mult", "win_met", "win_total", "server_idx",
                    "w", "k", "active")
 
 
+def _ratio32(num, den):
+    # int/int true division promotes to the DEFAULT float — float64 under
+    # enable_x64 — which would split the boundary cond's branch dtypes.
+    # Casting both sides first keeps every ratio float32 in either mode
+    # (bitwise identical under the standard config: int32->f32 convert +
+    # f32 divide is exactly what true_divide lowers to there).
+    return num.astype(jnp.float32) / den.astype(jnp.float32)
+
+
 def _seg_phases(static: JaxSimStatic):
     """Shared segment-event arithmetic for the segmented engines.
 
@@ -861,7 +870,7 @@ def _seg_phases(static: JaxSimStatic):
         lat, slo = dsl(dev["dev_latency"]), dsl(dev["slo"])
         leave = dsl(dev["leave_t"])
         offs, offf = dsl(dev["off_start"]), dsl(dev["off_for"])
-        ar = jnp.arange(G)
+        ar = jnp.arange(G, dtype=jnp.int32)
         due = (dn <= t) & (cur < s) & has_due
         departs = due & (dn >= leave)
         done = due & ~departs
@@ -921,7 +930,7 @@ def _seg_phases(static: JaxSimStatic):
                  can_pop):
         braw = jnp.minimum(qlen, srv["max_batch"][server_idx])
         b = jnp.max(jnp.where(ladder <= braw, ladder, 1))
-        lanes = jnp.arange(MAX_POP)
+        lanes = jnp.arange(MAX_POP, dtype=jnp.int32)
         take = (lanes < b) & can_pop
         qidx = (head + lanes) % cap
         starts = q_start[qidx]
@@ -985,7 +994,7 @@ def _engine_fns(static: JaxSimStatic):
         return jnp.minimum(t_dev, t_srv)
 
     def drained(st, c):
-        valid = jnp.arange(n) < c["n_real"]
+        valid = jnp.arange(n, dtype=jnp.int32) < c["n_real"]
         return ((st["tail"] == st["head"])
                 & jnp.all(jnp.where(valid, st["cursor"] >= s, True)))
 
@@ -1052,7 +1061,7 @@ def _engine_fns(static: JaxSimStatic):
         departs = due & (st["dev_next"] >= c["leave_t"])
         done = due & ~departs
         cj = jnp.clip(st["cursor"], 0, s - 1)
-        conf_j = conf[jnp.arange(n), cj]
+        conf_j = conf[jnp.arange(n, dtype=jnp.int32), cj]
         local = conf_j >= st["thresh"]          # Eq. 3
         comp_local = done & local
         met_local = dev_latency <= slo
@@ -1060,11 +1069,11 @@ def _engine_fns(static: JaxSimStatic):
         win_total = st["win_total"] + comp_local
         tot_met = st["tot_met"] + (comp_local & met_local)
         tot = st["tot"] + comp_local
-        correct = st["correct"] + comp_local * cl[jnp.arange(n), cj]
+        correct = st["correct"] + comp_local * cl[jnp.arange(n, dtype=jnp.int32), cj]
 
         fwd_mask = done & ~local
         st_fwd = st["fwd"] + fwd_mask
-        pos = st["tail"] + jnp.cumsum(fwd_mask) - 1
+        pos = st["tail"] + jnp.cumsum(fwd_mask, dtype=jnp.int32) - 1
         # non-forwarding rows aim at index cap and are dropped: an
         # in-ring dummy slot would collide with a REAL append once a
         # small queue_cap wraps tail past it (duplicate-index scatter,
@@ -1072,9 +1081,10 @@ def _engine_fns(static: JaxSimStatic):
         posm = jnp.where(fwd_mask, pos % cap, cap)
         q_start = st["q_start"].at[posm].set(
             st["dev_next"] - dev_latency, mode="drop")
-        q_dev = st["q_dev"].at[posm].set(jnp.arange(n), mode="drop")
+        q_dev = st["q_dev"].at[posm].set(jnp.arange(n, dtype=jnp.int32),
+                                         mode="drop")
         q_samp = st["q_samp"].at[posm].set(cj, mode="drop")
-        tail = st["tail"] + jnp.sum(fwd_mask)
+        tail = st["tail"] + jnp.sum(fwd_mask, dtype=jnp.int32)
 
         # a departed device's stream counts as exhausted (drained() and
         # next_event_t both read cursor >= s), so the drain early-exit
@@ -1083,7 +1093,7 @@ def _engine_fns(static: JaxSimStatic):
         # next sample starts when the device is free AND it has arrived
         # (no arrival tensor -> back-to-back, the gather compiles out)
         if static.has_arrive:
-            arrive_next = arrive_c[jnp.arange(n),
+            arrive_next = arrive_c[jnp.arange(n, dtype=jnp.int32),
                                    jnp.clip(cursor, 0, s - 1)]
             start_next = jnp.maximum(st["dev_next"], arrive_next)
         else:
@@ -1100,7 +1110,7 @@ def _engine_fns(static: JaxSimStatic):
         sidx = st["server_idx"]
         braw = jnp.minimum(qlen, srv["max_batch"][sidx])
         b = jnp.max(jnp.where(ladder <= braw, ladder, 1))
-        lanes = jnp.arange(MAX_POP)
+        lanes = jnp.arange(MAX_POP, dtype=jnp.int32)
         take = (lanes < b) & can_pop
         qidx = (st["head"] + lanes) % cap
         starts = q_start[qidx]          # updated arrays: same-event entries
@@ -1225,7 +1235,7 @@ def _engine_fns(static: JaxSimStatic):
         ``go``) and the float32 trace row — never the full carry, so the
         enclosing ``lax.cond`` stays cheap on event-only iterations.
         """
-        valid = jnp.arange(n) < c["n_real"]
+        valid = jnp.arange(n, dtype=jnp.int32) < c["n_real"]
         n_real_f = c["n_real"].astype(jnp.float32)
         off_end = c["off_start"] + c["off_for"]
         t_end = (st["w"] + 1).astype(jnp.float32) * window
@@ -1237,8 +1247,9 @@ def _engine_fns(static: JaxSimStatic):
         active = (~((t_end >= c["off_start"]) & (t_end < off_end))) \
             & member & valid
         sr = jnp.where(st["win_total"] > 0,
-                       100.0 * st["win_met"] / jnp.maximum(st["win_total"], 1),
-                       100.0)
+                       100.0 * _ratio32(st["win_met"],
+                                        jnp.maximum(st["win_total"], 1)),
+                       jnp.float32(100.0))
         thresh, mult = st["thresh"], st["mult"]
 
         def upd_multitascpp(_):
@@ -1247,7 +1258,8 @@ def _engine_fns(static: JaxSimStatic):
                                   a=c["a"],
                                   sr_target=c["sr_target"],
                                   mult_growth=c["mult_growth"]),
-                              n_active=jnp.sum(active), active=active)
+                              n_active=jnp.sum(active, dtype=jnp.int32),
+                              active=active)
             return upd["thresh"], upd["mult"]
 
         def upd_multitasc(_):
@@ -1273,11 +1285,13 @@ def _engine_fns(static: JaxSimStatic):
             0, static.n_servers - 1)
 
         acc_run = jnp.where(st["tot"] > 0,
-                            st["correct"] / jnp.maximum(st["tot"], 1), 1.0)
+                            _ratio32(st["correct"],
+                                     jnp.maximum(st["tot"], 1)),
+                            jnp.float32(1.0))
         row = {
             "thresh": jnp.nanmean(jnp.where(active, thresh2, jnp.nan)),
             "sr": jnp.sum(jnp.where(valid, sr, 0.0)) / n_real_f,
-            "active": jnp.sum(active) / n_real_f,
+            "active": jnp.sum(active, dtype=jnp.int32) / n_real_f,
             "server_idx": server_idx.astype(jnp.float32),
             "fwd": jnp.sum(jnp.where(valid, st["fwd"], 0)).astype(jnp.float32),
             "acc": jnp.sum(jnp.where(valid, acc_run, 0.0)) / n_real_f,
@@ -1300,20 +1314,20 @@ def _engine_fns(static: JaxSimStatic):
         return upd, row
 
     def lane_metrics(final, c):
-        valid = jnp.arange(n) < c["n_real"]
+        valid = jnp.arange(n, dtype=jnp.int32) < c["n_real"]
         n_real_f = c["n_real"].astype(jnp.float32)
         tot = jnp.maximum(final["tot"], 1)
-        per_acc = final["correct"] / tot
+        per_acc = _ratio32(final["correct"], tot)
         return {
-            "sr": 100.0 * final["tot_met"].sum()
-                  / jnp.maximum(final["tot"].sum(), 1),
-            "per_device_sr": 100.0 * final["tot_met"] / tot,
+            "sr": 100.0 * _ratio32(final["tot_met"].sum(),
+                                   jnp.maximum(final["tot"].sum(), 1)),
+            "per_device_sr": 100.0 * _ratio32(final["tot_met"], tot),
             "per_device_acc": per_acc,
             "accuracy": jnp.sum(jnp.where(valid, per_acc, 0.0)) / n_real_f,
-            "throughput": final["tot"].sum()
+            "throughput": final["tot"].sum().astype(jnp.float32)
                           / jnp.maximum(final["last_done_t"], 1e-9),
-            "forwarded_frac": final["fwd"].sum()
-                              / jnp.maximum(final["tot"].sum(), 1),
+            "forwarded_frac": _ratio32(final["fwd"].sum(),
+                                       jnp.maximum(final["tot"].sum(), 1)),
             "completed": final["tot"].sum(),
             "queue_left": final["tail"] - final["head"],
             # realized queue high-water mark: must stay clear of
@@ -1384,7 +1398,7 @@ def _batched_engine(static, params, srv, conf, cl, ch, arrive, dev_latency,
         # dropped: one gather-free scatter per key, no per-lane select
         # over the trace buffers (an active lane's w is < n_windows, so
         # in-bounds exactly for the lanes that really close a window)
-        bidx = jnp.arange(bsz)
+        bidx = jnp.arange(bsz, dtype=jnp.int32)
         wj = jnp.where(go_b, st["w"], static.n_windows)
         traces = {key: st["traces"][key].at[bidx, wj].set(row[key],
                                                           mode="drop")
@@ -1443,7 +1457,7 @@ def _device_engine(static: JaxSimStatic, k: int, axis: str):
         return jax.lax.axis_index(axis).astype(jnp.int32) * n_loc
 
     def valid_mask(c):
-        return (shard_off() + jnp.arange(n_loc)) < c["n_real"]
+        return (shard_off() + jnp.arange(n_loc, dtype=jnp.int32)) < c["n_real"]
 
     def defer_offline(t_complete, c):
         off_end = c["off_start"] + c["off_for"]
@@ -1604,13 +1618,15 @@ def _device_engine(static: JaxSimStatic, k: int, axis: str):
         active = (~((t_end >= c["off_start"]) & (t_end < off_end))) \
             & member & valid
         sr = jnp.where(st["win_total"] > 0,
-                       100.0 * st["win_met"] / jnp.maximum(st["win_total"],
-                                                           1),
-                       100.0)
+                       100.0 * _ratio32(st["win_met"],
+                                        jnp.maximum(st["win_total"], 1)),
+                       jnp.float32(100.0))
         acc_run = jnp.where(st["tot"] > 0,
-                            st["correct"] / jnp.maximum(st["tot"], 1), 1.0)
+                            _ratio32(st["correct"],
+                                     jnp.maximum(st["tot"], 1)),
+                            jnp.float32(1.0))
         return {
-            "n_active": jnp.sum(active),
+            "n_active": jnp.sum(active, dtype=jnp.int32),
             "sr_sum": jnp.sum(jnp.where(valid, sr, 0.0)),
             "fwd_sum": jnp.sum(jnp.where(valid, st["fwd"], 0)),
             "acc_sum": jnp.sum(jnp.where(valid, acc_run, 0.0)),
@@ -1631,9 +1647,9 @@ def _device_engine(static: JaxSimStatic, k: int, axis: str):
         active = (~((t_end >= c["off_start"]) & (t_end < off_end))) \
             & member & valid
         sr = jnp.where(st["win_total"] > 0,
-                       100.0 * st["win_met"] / jnp.maximum(st["win_total"],
-                                                           1),
-                       100.0)
+                       100.0 * _ratio32(st["win_met"],
+                                        jnp.maximum(st["win_total"], 1)),
+                       jnp.float32(100.0))
         thresh, mult = st["thresh"], st["mult"]
 
         def upd_multitascpp(_):
@@ -1712,7 +1728,7 @@ def _device_engine(static: JaxSimStatic, k: int, axis: str):
     def metrics(final, c):
         valid = valid_mask(c)
         n_real_f = c["n_real"].astype(jnp.float32)
-        per_acc = final["correct"] / jnp.maximum(final["tot"], 1)
+        per_acc = _ratio32(final["correct"], jnp.maximum(final["tot"], 1))
         gsum = psum({
             "tot": final["tot"].sum(),
             "tot_met": final["tot_met"].sum(),
@@ -1720,14 +1736,16 @@ def _device_engine(static: JaxSimStatic, k: int, axis: str):
             "acc": jnp.sum(jnp.where(valid, per_acc, 0.0)),
         })
         return {
-            "sr": 100.0 * gsum["tot_met"] / jnp.maximum(gsum["tot"], 1),
-            "per_device_sr": 100.0 * final["tot_met"]
-                             / jnp.maximum(final["tot"], 1),
+            "sr": 100.0 * _ratio32(gsum["tot_met"],
+                                   jnp.maximum(gsum["tot"], 1)),
+            "per_device_sr": 100.0 * _ratio32(final["tot_met"],
+                                              jnp.maximum(final["tot"], 1)),
             "per_device_acc": per_acc,
             "accuracy": gsum["acc"] / n_real_f,
-            "throughput": gsum["tot"]
+            "throughput": gsum["tot"].astype(jnp.float32)
                           / jnp.maximum(final["last_done_t"], 1e-9),
-            "forwarded_frac": gsum["fwd"] / jnp.maximum(gsum["tot"], 1),
+            "forwarded_frac": _ratio32(gsum["fwd"],
+                                       jnp.maximum(gsum["tot"], 1)),
             "completed": gsum["tot"],
             "queue_left": final["tail"] - final["head"],
             "queue_peak": final["max_qlen"],

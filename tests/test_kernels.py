@@ -21,6 +21,24 @@ def test_bvsb_sweep(b, v, dtype):
     assert jnp.mean((got_i == exp_i).astype(jnp.float32)) > 0.99
 
 
+@pytest.mark.parametrize("b", [1, 3, 12, 20])
+def test_bvsb_ragged_batch(b):
+    # batches off an unsorted ladder aren't multiples of the row tile
+    # (BB=8): the kernel pads the batch axis and slices the pad rows off
+    x = (jax.random.normal(jax.random.key(b), (b, 1024)) * 4).astype(
+        jnp.float32)
+    # duplicate-max tie rows: the runner-up equals the max, BvSB -> 0
+    x = x.at[0, 11].set(50.0).at[0, 777].set(50.0)
+    if b > 1:
+        x = x.at[b - 1, 5].set(40.0).at[b - 1, 6].set(40.0)
+    got_b, got_i = bvsb(x, interpret=True)
+    exp_b, exp_i = ref.bvsb_ref(x)
+    assert got_b.shape == (b,) and got_i.shape == (b,)
+    np.testing.assert_allclose(got_b, exp_b, atol=2e-3)
+    np.testing.assert_allclose(got_b[0], 0.0, atol=2e-3)
+    assert int(got_i[0]) in (11, 777)
+
+
 def test_bvsb_extreme_logits():
     x = jnp.zeros((8, 512)).at[:, 7].set(100.0)  # near-one-hot
     got_b, got_i = bvsb(x, interpret=True)

@@ -1,0 +1,416 @@
+"""Wall-clock async transport: determinism, differential, stress.
+
+Four contracts:
+
+* **determinism** — ``run_transport`` returns a ``CascadeResult``
+  *exactly* equal to ``run_cascade``'s on the same scenario (sr,
+  throughput, completions, drops, switches, thresholds timeline),
+  including under churn, model switching, multiple in-flight slots and
+  a bounded shedding queue. The threads buy wall-clock overlap, never
+  different numbers.
+* **differential** — the async path tracks ``repro.sim.jaxsim`` within
+  the same ``SERVING_TOL`` budget as the sequential loop, with exact
+  completed-count conservation.
+* **linearizability** — hammering ``ServerEngine.step_begin`` /
+  ``complete`` and ``RequestQueue.put`` / shed from many threads loses
+  no request, double-completes none, never oversubscribes the slot
+  bound, and fires ``on_queue_drop`` exactly once per victim.
+* **overlap + failure** — on a sleep-dominated workload the async wall
+  clock beats the sequential loop by a wide margin, and a worker-side
+  exception propagates out of ``run_transport`` instead of deadlocking
+  a barrier.
+
+Also negative-tests the ``fig_async`` gates of tools/check_bench.py:
+the speedup floor and each async delta gate must actually reject a
+regression, and silently dropping a gated metric must fail, not pass.
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import scenarios
+from repro.configs.cascade_tiers import ServerProfile
+from repro.serving.cascade import run_cascade
+from repro.serving.engine import Request, ServedModel, ServerEngine
+from repro.serving.queue import RequestQueue
+from repro.serving.replay import (SERVING_TOL, StreamClient, _oracle,
+                                  replay_cascade, serving_vs_sim)
+from repro.serving.transport import run_transport
+from repro.sim import events, synthetic
+
+N, S, SEED = 10, 80, 11
+SLO, BASE_LAT = 0.16, 0.06
+SERVERS = (ServerProfile("tx-fast", "synthetic", 0.90, 0.045, 16),
+           ServerProfile("tx-heavy", "synthetic", 0.94, 0.070, 16))
+
+
+def _scenario(name):
+    streams = synthetic.device_streams(N, S, 0.70, [0.90, 0.94], SEED)
+    rng = np.random.default_rng(2)
+    lat = (BASE_LAT * rng.uniform(0.9, 1.1, N)).astype(np.float32)
+    r = scenarios.realize(scenarios.SCENARIOS[name], [SEED], N, S, lat)
+    st = dict(streams)
+    if r["arrive"] is not None:
+        st["arrive"] = r["arrive"][0]
+    return st, lat, r["join_t"][0], r["leave_t"][0]
+
+
+def _run_both(scn, sched, **kw):
+    results = []
+    for transport in ("event", "async"):
+        st, lat, join_t, leave_t = _scenario(scn)
+        slo = np.full(N, SLO, np.float32)
+        results.append(replay_cascade(
+            sched, st, lat, slo, SERVERS, join_t=join_t,
+            leave_t=leave_t, transport=transport, **kw))
+    return results
+
+
+def _assert_equal(a, b):
+    assert a.completed == b.completed and a.completed > 0
+    assert a.sr == b.sr
+    assert a.throughput == b.throughput
+    assert a.forwarded_frac == b.forwarded_frac
+    assert a.accuracy == b.accuracy
+    assert a.dropped == b.dropped
+    assert a.switches == b.switches
+    assert a.queue_peak == b.queue_peak
+    assert a.last_completion_t == b.last_completion_t
+    np.testing.assert_array_equal(a.per_device_sr, b.per_device_sr)
+    np.testing.assert_array_equal(a.per_device_acc, b.per_device_acc)
+    assert a.timeline["t"] == b.timeline["t"]
+    assert a.timeline["thresholds"] == b.timeline["thresholds"]
+    assert a.timeline["model"] == b.timeline["model"]
+
+
+@pytest.mark.parametrize("sched", ["static", "multitasc", "multitasc++"])
+@pytest.mark.parametrize("scn", ["steady", "churn"])
+def test_async_equals_sync(scn, sched):
+    a, b = _run_both(scn, sched)
+    _assert_equal(a, b)
+
+
+def test_async_equals_sync_switching_and_slots():
+    """Churn + drift + model switching + 4 in-flight slots: the async
+    pipeline at its deepest still replays the exact event order."""
+    a, b = _run_both("churn_drift", "multitasc++", model_switching=True,
+                     max_in_flight=4)
+    _assert_equal(a, b)
+
+
+def test_async_equals_sync_under_shedding():
+    """A tiny shedding queue forces the backpressure path (victims
+    complete with their local prediction on the *dispatch* thread) —
+    drop accounting must stay exact."""
+    results = []
+    for transport in ("event", "async"):
+        st, lat, join_t, leave_t = _scenario("steady")
+        slo = np.full(N, SLO, np.float32)
+        results.append(replay_cascade(
+            "multitasc++", st, lat, slo, SERVERS,
+            queue=RequestQueue(capacity=2, policy="shed_oldest"),
+            transport=transport))
+    a, b = results
+    assert a.dropped > 0          # the shed path actually ran
+    _assert_equal(a, b)
+
+
+def test_async_matches_sim_within_tol():
+    """The sim-vs-serving differential holds for the async transport
+    with the same budget as the sequential loop (it must: the results
+    are equal), including exact conservation."""
+    st, lat, join_t, leave_t = _scenario("churn")
+    slo = np.full(N, SLO, np.float32)
+    live, sim, d = serving_vs_sim("multitasc++", st, lat, slo, SERVERS,
+                                  join_t=join_t, leave_t=leave_t,
+                                  transport="async")
+    tol = SERVING_TOL["multitasc++"]
+    assert d["d_completed"] == 0
+    assert d["d_sr"] <= tol["sr"]
+    assert d["d_thr_rel"] <= tol["thr_rel"]
+    assert d["d_fwd"] <= tol["fwd"]
+
+
+# ---------------------------------------------------------------------------
+# threaded stress: engine + queue linearizability
+# ---------------------------------------------------------------------------
+def _stress_engine(max_in_flight):
+    profile = ServerProfile("stress", "synthetic", 0.9, 1e-4, 8)
+
+    def oracle(reqs):
+        return (np.ones(len(reqs), np.float32),
+                np.ones(len(reqs), np.int32))
+
+    return ServerEngine([ServedModel("stress", None, None, profile,
+                                     oracle=oracle)],
+                        max_in_flight=max_in_flight)
+
+
+def test_stress_engine_step_complete():
+    """8 producers + 8 dispatchers hammer submit/step/complete: every
+    submitted request completes exactly once, the slot bound is never
+    oversubscribed, and no batch double-completes."""
+    engine = _stress_engine(max_in_flight=3)
+    n_threads, per_thread = 8, 200
+    done = []                      # (device_id, sample) of completions
+    done_lock = threading.Lock()
+    stop = threading.Event()
+    over = []                      # slot-bound violations observed
+
+    def produce(k):
+        for j in range(per_thread):
+            engine.submit(Request(k, j, 0.0, 0.0, payload=None))
+
+    def dispatch():
+        while not stop.is_set() or len(engine.queue):
+            out = engine.step(0.0)
+            if out is None:
+                time.sleep(1e-4)
+                continue
+            if engine.in_flight > engine.max_in_flight:
+                over.append(engine.in_flight)
+            got = [(r.device_id, r.sample) for r in out["requests"]]
+            engine.complete(out)
+            with done_lock:
+                done.extend(got)
+
+    producers = [threading.Thread(target=produce, args=(k,))
+                 for k in range(n_threads)]
+    dispatchers = [threading.Thread(target=dispatch) for _ in range(8)]
+    for th in producers + dispatchers:
+        th.start()
+    for th in producers:
+        th.join()
+    stop.set()
+    for th in dispatchers:
+        th.join()
+    assert not over
+    assert engine.in_flight == 0
+    expected = {(k, j) for k in range(n_threads)
+                for j in range(per_thread)}
+    assert len(done) == len(expected), "lost or double completion"
+    assert set(done) == expected
+
+
+def test_stress_engine_double_complete_raises():
+    """Two threads racing ``complete`` on one record: exactly one wins,
+    the other raises — a slot can never be freed twice."""
+    engine = _stress_engine(max_in_flight=1)
+    engine.submit(Request(0, 0, 0.0, 0.0))
+    out = engine.step(0.0)
+    failures = []
+
+    def racer():
+        try:
+            engine.complete(out)
+        except ValueError:
+            failures.append(1)
+
+    threads = [threading.Thread(target=racer) for _ in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(failures) == 3      # one winner, three losers
+    assert engine.in_flight == 0
+
+
+def test_stress_queue_put_shed():
+    """Concurrent producers against a bounded shed_oldest queue: every
+    request ends up either queued or returned as a victim, exactly
+    once — the capacity check and the shed are one atomic section."""
+    q = RequestQueue(capacity=16, policy="shed_oldest")
+    n_threads, per_thread = 8, 300
+    victims = []
+    vlock = threading.Lock()
+
+    def produce(k):
+        mine = []
+        for j in range(per_thread):
+            v = q.put(Request(k, j, 0.0, 0.0))
+            if v is not None:
+                mine.append((v.device_id, v.sample))
+        with vlock:
+            victims.extend(mine)
+
+    threads = [threading.Thread(target=produce, args=(k,))
+               for k in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    left = [(r.device_id, r.sample) for r in q.pop_batch(10 ** 9)]
+    total = n_threads * per_thread
+    assert len(victims) == q.n_shed == total - len(left)
+    assert len(left) == 16         # ends full to capacity
+    accounted = victims + left
+    assert len(set(accounted)) == len(accounted) == total
+
+
+def test_on_queue_drop_exactly_once_per_victim():
+    """Transport-level drop accounting: the scheduler's
+    ``on_queue_drop`` hook fires exactly once per shed victim, and the
+    async transport agrees with the sequential loop."""
+    counts = {}
+    for transport in ("event", "async"):
+        st, lat, join_t, leave_t = _scenario("steady")
+        slo = np.full(N, SLO, np.float32)
+        sched = events.make_scheduler(
+            "multitasc++", N, server_profile=SERVERS[0],
+            slo=float(slo.min()), init_threshold=0.5,
+            static_threshold=0.35)
+        hooked = []
+        sched.on_queue_drop = hooked.append
+        conf = np.asarray(st["confidence"], np.float32)
+        cl = np.asarray(st["correct_light"])
+        ch = np.asarray(st["correct_heavy"])
+        clients = [StreamClient(i, conf[i], cl[i], lat[i], SLO, 1.5, 0.5)
+                   for i in range(N)]
+        engine = ServerEngine(
+            [ServedModel(p.name, None, None, p,
+                         oracle=_oracle(ch, k))
+             for k, p in enumerate(SERVERS)],
+            queue=RequestQueue(capacity=2, policy="shed_oldest"))
+        run = run_cascade if transport == "event" else run_transport
+        res = run(clients, engine, sched,
+                  [np.arange(S)] * N, [np.ones(S, np.int64)] * N)
+        assert res.dropped > 0
+        assert len(hooked) == res.dropped
+        counts[transport] = (res.dropped, sorted(hooked))
+    assert counts["event"] == counts["async"]
+
+
+# ---------------------------------------------------------------------------
+# wall-clock overlap + failure propagation
+# ---------------------------------------------------------------------------
+class _SleepClient(StreamClient):
+    """Stream client whose local inference costs real host time."""
+
+    def __init__(self, *args, host_cost: float, **kw):
+        super().__init__(*args, **kw)
+        self.host_cost = host_cost
+
+    def run_local(self, j):
+        time.sleep(self.host_cost)
+        return super().run_local(j)
+
+
+def _sleepy_setup(host_cost, accel_cost, n=4, s=40):
+    streams = synthetic.device_streams(n, s, 0.70, [0.92], SEED)
+    conf = np.asarray(streams["confidence"], np.float32)
+    cl = np.asarray(streams["correct_light"])
+    ch = np.asarray(streams["correct_heavy"])
+    if ch.ndim == 2:
+        ch = ch[..., None]
+    clients = [_SleepClient(i, conf[i], cl[i], 0.05, SLO, 1.5, 0.5,
+                            host_cost=host_cost)
+               for i in range(n)]
+    base = _oracle(ch, 0)
+
+    def slow_oracle(reqs):
+        time.sleep(accel_cost)
+        return base(reqs)
+
+    profile = ServerProfile("sleepy", "synthetic", 0.92, 0.045, 16)
+    engine = ServerEngine([ServedModel("sleepy", None, None, profile,
+                                       oracle=slow_oracle)])
+    sched = events.make_scheduler("static", n, server_profile=profile,
+                                  slo=SLO, init_threshold=0.5,
+                                  static_threshold=0.5)
+    return clients, engine, sched, [np.arange(s)] * n, \
+        [np.ones(s, np.int64)] * n
+
+
+def test_async_overlaps_host_and_accelerator():
+    """Sleep-dominated workload with comparable host and accelerator
+    cost: the sequential loop pays host + accel, the transport pays
+    ~max(host, accel). Gate at 0.8x — generous against CI noise; the
+    tuned figure (benchmarks/fig_async.py) gates the real speedup."""
+    walls = {}
+    for transport in ("event", "async"):
+        args = _sleepy_setup(host_cost=1e-3, accel_cost=4e-3)
+        run = run_cascade if transport == "event" else run_transport
+        t0 = time.perf_counter()
+        res = run(*args)
+        walls[transport] = time.perf_counter() - t0
+        assert res.completed == 4 * 40
+    assert walls["async"] < 0.8 * walls["event"], walls
+
+
+def test_worker_exception_propagates():
+    """An oracle blowing up on an accel worker must surface from
+    ``run_transport`` — not hang the window barrier."""
+    args = list(_sleepy_setup(host_cost=0.0, accel_cost=0.0))
+    engine = args[1]
+
+    def bomb(reqs):
+        raise RuntimeError("accelerator on fire")
+
+    engine.served[0] = ServedModel("bomb", None, None,
+                                   engine.served[0].profile, oracle=bomb)
+    with pytest.raises(RuntimeError, match="on fire"):
+        run_transport(*args)
+
+
+# ---------------------------------------------------------------------------
+# check_bench: the fig_async gates actually reject regressions
+# ---------------------------------------------------------------------------
+def _check_bench(tmp_path, new_extra, base_extra):
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_async_probe", root / "tools/check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    row = {"wall_s": 1.0, "n_points": 2, "n_compiles": 8, "n_events": 10,
+           "n_shards": 1, "n_points_sharded": 0}
+    new = {"_schema": mod.BENCH_SCHEMA, "fig_async": {**row, **new_extra}}
+    base = {"_schema": mod.BENCH_SCHEMA,
+            "fig_async": {**row, **base_extra}}
+    pn, pb = tmp_path / "new.json", tmp_path / "base.json"
+    pn.write_text(json.dumps(new))
+    pb.write_text(json.dumps(base))
+    old = sys.argv
+    sys.argv = ["check_bench", str(pn), str(pb)]
+    try:
+        return mod.main()
+    finally:
+        sys.argv = old
+
+
+GOOD = {"async_speedup": 1.6, "async_d_sr": 0.0, "async_d_thr_rel": 0.0,
+        "async_d_fwd": 0.0, "async_d_completed": 0}
+
+
+def test_check_bench_passes_healthy_fig_async(tmp_path):
+    assert _check_bench(tmp_path, GOOD, GOOD) == 0
+
+
+def test_check_bench_rejects_serialized_transport(tmp_path):
+    """The speedup gate fails *small-side*: ~1.0x means the transport
+    stopped overlapping."""
+    assert _check_bench(tmp_path, {**GOOD, "async_speedup": 1.02},
+                        GOOD) == 1
+
+
+def test_check_bench_rejects_async_delta_regressions(tmp_path):
+    assert _check_bench(tmp_path, {**GOOD, "async_d_sr": 5.0},
+                        GOOD) == 1
+    assert _check_bench(tmp_path, {**GOOD, "async_d_thr_rel": 0.2},
+                        GOOD) == 1
+    assert _check_bench(tmp_path, {**GOOD, "async_d_fwd": 0.3},
+                        GOOD) == 1
+    assert _check_bench(tmp_path, {**GOOD, "async_d_completed": 2},
+                        GOOD) == 1
+
+
+def test_check_bench_rejects_missing_async_metrics(tmp_path):
+    """Silently dropping a gated metric must fail, not pass vacuously."""
+    for key in ("async_speedup", "async_d_sr", "async_d_completed"):
+        crippled = {k: v for k, v in GOOD.items() if k != key}
+        assert _check_bench(tmp_path, crippled, GOOD) == 1, key

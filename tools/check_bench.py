@@ -43,6 +43,16 @@ Hard failures (exit 1):
     ``serving_extra_client_compiles != 0`` (growing the fleet over the
     same models recompiled something).
 
+  * a ``fig_async`` failure (benchmarks/fig_async.py): an
+    ``async_d_*`` sim-vs-async-serving delta exceeds its
+    ``ASYNC_DELTA_LIMITS`` entry or ``async_d_completed != 0`` (the
+    threaded transport must replay the exact sequential event order —
+    same budgets as the ``serving_d_*`` keys), or ``async_speedup``
+    falls **below** ``ASYNC_SPEEDUP_MIN`` — the only gate in this file
+    that fails small-side: a transport that stops overlapping host
+    batching with accelerator execution lands at ~1.0x on the
+    sleep-balanced probe and must fail, not merely slow down.
+
 Wall time is reported but only warned about by default (CI machines are
 too noisy for hard wall gates); ``--strict-wall R`` turns wall_s >
 R * baseline into a failure.
@@ -73,6 +83,17 @@ SERVING_DELTA_LIMITS = {
     "serving_d_thr_rel": 0.05,  # relative throughput
     "serving_d_fwd": 0.05,      # forwarded fraction
 }
+# fig_async: the async transport replayed through the same differential
+# (same magnitudes as above; measured exactly 0.0 — the transport
+# replays the sequential event order bit-for-bit)
+ASYNC_DELTA_LIMITS = {
+    "async_d_sr": 3.0,
+    "async_d_thr_rel": 0.05,
+    "async_d_fwd": 0.05,
+}
+# minimum sync-over-async wall speedup on the sleep-balanced overlap
+# probe (measured ~1.6x; a serialized transport regression lands ~1.0x)
+ASYNC_SPEEDUP_MIN = 1.3
 
 
 def main() -> int:
@@ -185,6 +206,36 @@ def main() -> int:
                     f"{n['serving_d_completed']} != 0 (sim and serving "
                     f"completed different sample sets: conservation "
                     f"broken)")
+        for mk, lim in sorted(ASYNC_DELTA_LIMITS.items()):
+            if mk not in b:
+                continue
+            if n.get(mk) is None:
+                failures.append(f"{fig}: {mk} missing from new run")
+            elif n[mk] > lim:
+                failures.append(
+                    f"{fig}: {mk} {n[mk]:.4f} > {lim} (the async "
+                    f"transport diverged from the simulator beyond the "
+                    f"replay tolerance: it reordered events)")
+        if "async_d_completed" in b:
+            if n.get("async_d_completed") is None:
+                failures.append(
+                    f"{fig}: async_d_completed missing from new run")
+            elif n["async_d_completed"] != 0:
+                failures.append(
+                    f"{fig}: async_d_completed "
+                    f"{n['async_d_completed']} != 0 (the async transport "
+                    f"completed a different sample set than the sim: "
+                    f"conservation broken)")
+        if "async_speedup" in b:
+            if n.get("async_speedup") is None:
+                failures.append(
+                    f"{fig}: async_speedup missing from new run")
+            elif n["async_speedup"] < ASYNC_SPEEDUP_MIN:
+                failures.append(
+                    f"{fig}: async_speedup {n['async_speedup']:.3f} < "
+                    f"{ASYNC_SPEEDUP_MIN} (overlapped dispatch stopped "
+                    f"beating the sequential loop on the sleep-balanced "
+                    f"probe: the transport serialized)")
         if "serving_compile_budget" in b:
             if n.get("serving_compiles") is None or \
                     n.get("serving_compile_budget") is None:

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import decision
-from repro.core.calibration import calibrate_static_threshold
+from repro.core.calibration import calibrate_static_threshold, score_logits
 from repro.models.model import build_model
 from repro.sim import synthetic
 
@@ -37,16 +37,18 @@ def main():
     rng = np.random.default_rng(0)
     tokens = np.asarray(rng.integers(0, light_cfg.vocab_size, (16, 24)),
                         np.int32)
+    # confidence scoring goes through the fused kernel dispatch layer
+    # (kernels.ops.bvsb) — the same path the serving engine compiles
     logits, _, _ = light.forward(lp, {"tokens": tokens})
-    conf, pred = decision.bvsb_confidence(logits[:, -1, :])
-    fwd = decision.decide(conf, thresh)
+    conf, pred = score_logits(np.asarray(logits[:, -1, :]))
+    fwd = np.asarray(decision.decide(conf, np.float32(thresh)))
     print(f"\nbatch of {len(tokens)}: {int(fwd.sum())} forwarded "
           f"(mean BvSB {float(conf.mean()):.3f})")
 
-    fwd_idx = np.nonzero(np.asarray(fwd))[0]
+    fwd_idx = np.nonzero(fwd)[0]
     if len(fwd_idx):
         hlogits, _, _ = heavy.forward(hp, {"tokens": tokens[fwd_idx]})
-        hconf, hpred = decision.bvsb_confidence(hlogits[:, -1, :])
+        hconf, hpred = score_logits(np.asarray(hlogits[:, -1, :]))
         print(f"server refined {len(fwd_idx)} samples "
               f"(heavy mean BvSB {float(hconf.mean()):.3f})")
     print("done.")

@@ -40,6 +40,8 @@ DEFAULT_SCAN = (
     "src/repro/serving", "src/repro/core", "src/repro/configs",
     "src/repro/analysis", "src/repro/sim/jaxsim.py",
     "src/repro/sim/events.py", "src/repro/sim/synthetic.py",
+    "src/repro/kernels/ops.py", "src/repro/kernels/autotune.py",
+    "src/repro/kernels/timing.py",
     "benchmarks", "tools", "examples",
 )
 EXCLUDE_DIRS = {"__pycache__", "lint_corpus"}

@@ -79,12 +79,24 @@ TRACED_FUNCTIONS: Dict[str, Set[str]] = {
                                    "entropy_confidence", "decide"},
 }
 
-# traced scheduler kernels HD004 polices at host call sites
+# traced kernels HD004 polices at host call sites: the scheduler
+# kernels (call the module's jitted wrapper), and the raw Pallas
+# kernels + their pure-jnp oracles (all hot-path traffic goes through
+# the dispatch layer ``repro.kernels.ops`` — its jitted ``_*_dispatch``
+# wrappers are the only sanctioned jit boundaries, and they carry the
+# mode/tile static args that ``cache_token()`` pins into the serving
+# executable cache)
 KERNEL_MODULES: Dict[str, Set[str]] = {
     "repro.core.multitascpp": {"update", "init_state"},
     "repro.core.multitasc": {"update", "init_state"},
     "repro.core.switching": {"decide", "decide_partials",
                              "decide_from_partials"},
+    "repro.kernels.bvsb": {"bvsb"},
+    "repro.kernels.flash_attention": {"flash_attention"},
+    "repro.kernels.decode_attention": {"decode_attention"},
+    "repro.kernels.rglru_scan": {"rglru_scan"},
+    "repro.kernels.ref": {"bvsb_ref", "flash_attention_ref",
+                          "decode_attention_ref", "rglru_scan_ref"},
 }
 
 

@@ -234,6 +234,64 @@ def _scheduler_entries() -> List[TraceEntry]:
             TraceEntry("switching-decide", build_decide, x64=True)]
 
 
+def _kernel_entries() -> List[TraceEntry]:
+    """The jitted kernel dispatch wrappers in ``kernels/ops.py``, traced
+    in every CPU-reachable mode (interpret = the kernel body as jnp ops,
+    ref = the pure-jnp oracle). x64=True: the kernel bodies and oracles
+    pin every constant/iota to f32/i32, so enable_x64 must change
+    nothing (the tie-mask ``-inf`` and masking ``-1e30`` scalars have
+    regressed to weak f64 before)."""
+    import functools
+
+    from repro.kernels import ops
+
+    def build_bvsb(mode):
+        def build():
+            bb, bv = (0, 0) if mode == "ref" else ops.bvsb_tiles()
+            fn = functools.partial(ops._bvsb_dispatch, mode=mode,
+                                   bb=bb, bv=bv)
+            return fn, (np.zeros((8, 256), np.float32),), {}
+        return build
+
+    def build_flash(mode):
+        def build():
+            fn = functools.partial(ops._flash_dispatch, mode=mode,
+                                   causal=True, window=None)
+            q = np.zeros((2, 16, 4, 32), np.float32)
+            kv = np.zeros((2, 16, 2, 32), np.float32)
+            return fn, (q, kv, kv), {}
+        return build
+
+    def build_decode(mode):
+        def build():
+            fn = functools.partial(ops._decode_dispatch, mode=mode)
+            q = np.zeros((2, 4, 32), np.float32)
+            kc = np.zeros((2, 16, 2, 32), np.float32)
+            return fn, (q, kc, kc, np.full(2, 9, np.int32)), {}
+        return build
+
+    def build_rglru(mode):
+        def build():
+            def fn(a, u):
+                return ops._rglru_dispatch(a, u, None, mode=mode)
+            a = np.zeros((2, 16, 32), np.float32)
+            return fn, (a, a), {}
+        return build
+
+    out = []
+    for mode in ("interpret", "ref"):
+        out += [
+            TraceEntry(f"kernel-bvsb-{mode}", build_bvsb(mode), x64=True),
+            TraceEntry(f"kernel-flash-{mode}", build_flash(mode),
+                       x64=True),
+            TraceEntry(f"kernel-decode-{mode}", build_decode(mode),
+                       x64=True),
+            TraceEntry(f"kernel-rglru-{mode}", build_rglru(mode),
+                       x64=True),
+        ]
+    return out
+
+
 def _serving_classify_entry() -> TraceEntry:
     def build():
         from repro.configs import get_config
@@ -249,7 +307,8 @@ def _serving_classify_entry() -> TraceEntry:
 
 def default_trace_entries() -> List[TraceEntry]:
     return ([_lane_core_entry(False), _lane_core_entry(True)]
-            + _scheduler_entries() + [_serving_classify_entry()])
+            + _scheduler_entries() + [_serving_classify_entry()]
+            + _kernel_entries())
 
 
 def default_static_key_entries() -> List[StaticKeyEntry]:

@@ -16,6 +16,32 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import decision
+
+
+def score_logits(logits, *, metric: str = "bvsb"):
+    """Score raw (N, V) logits through the same fused kernel dispatch the
+    serving hot path uses (``kernels.ops`` via ``decision.METRICS``), so
+    calibration sees bitwise the confidences the live cascade will act
+    on. Returns host arrays (conf (N,) f32, pred (N,) i32).
+    """
+    conf, pred = decision.METRICS[metric](logits)
+    return np.asarray(conf), np.asarray(pred)
+
+
+def calibrate_from_logits(logits, correct_l, correct_h, *,
+                          metric: str = "bvsb", **kwargs):
+    """Calibrate a static threshold directly from light-model logits.
+
+    Confidence comes from ``score_logits`` — the kernel-dispatch path —
+    not a host-side softmax, so the calibrated threshold is consistent
+    with serving-time scoring. Returns (threshold, info) like
+    ``calibrate_static_threshold``.
+    """
+    conf, _ = score_logits(logits, metric=metric)
+    return calibrate_static_threshold(conf, correct_l, correct_h,
+                                      **kwargs)
+
 
 def cascade_accuracy(conf, correct_l, correct_h, threshold):
     fwd = conf < threshold

@@ -12,6 +12,11 @@ TPU mapping: grid = (B/BB, V/BV); the vocab (reduction) axis is the
 minormost grid dim so the VMEM scratch accumulators stay resident across
 vocab tiles; tiles are 128-lane aligned. The top-1 class index is tracked
 alongside for the cascade's prediction reuse.
+
+The (BB, BV) tile shape is a tunable: ``repro.kernels.autotune`` sweeps
+the grid against the roofline memory bound and persists the winner, and
+``repro.kernels.ops`` passes the persisted tiles in. Defaults below are
+the hand-picked fallback when no tuned tiles exist.
 """
 from __future__ import annotations
 
@@ -22,8 +27,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BB = 8      # batch rows per tile
-BV = 512    # vocab lanes per tile (multiple of 128)
+BB = 8      # batch rows per tile (default; autotune may override)
+BV = 512    # vocab lanes per tile (multiple of 128; autotune may override)
+
+# finite column-pad value: exp(_NEG - m1) underflows to exactly 0 for any
+# finite row max, and unlike -inf it cannot produce (-inf) - (-inf) = nan
+# in the online rescale when a whole tile is padding
+_NEG = -1e38
 
 
 def _bvsb_kernel(logits_ref, bvsb_ref, top1_ref, m1_s, m2_s, z_s, idx_s):
@@ -42,7 +52,8 @@ def _bvsb_kernel(logits_ref, bvsb_ref, top1_ref, m1_s, m2_s, z_s, idx_s):
     tile_m1 = jnp.max(x, axis=1)
     tile_arg = jnp.argmax(x, axis=1).astype(jnp.int32)
     cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    masked = jnp.where(cols == tile_arg[:, None], -jnp.inf, x)
+    masked = jnp.where(cols == tile_arg[:, None],
+                       jnp.float32(-jnp.inf), x)
     tile_m2 = jnp.max(masked, axis=1)
     tile_z = jnp.sum(jnp.exp(x - tile_m1[:, None]), axis=1)
 
@@ -67,23 +78,33 @@ def _bvsb_kernel(logits_ref, bvsb_ref, top1_ref, m1_s, m2_s, z_s, idx_s):
         top1_ref[...] = idx_s[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def bvsb(logits, *, interpret=False):
-    """logits: (B, V) -> (bvsb (B,) fp32, top1 (B,) int32)."""
+@functools.partial(jax.jit, static_argnames=("interpret", "bb", "bv"))
+def bvsb(logits, *, interpret=False, bb=None, bv=None):
+    """logits: (B, V) -> (bvsb (B,) fp32, top1 (B,) int32).
+
+    ``bb``/``bv`` override the (BB, BV) tile shape (autotuned callers);
+    both are clamped to the actual array extent. Ragged batches (a
+    12-row pop off an unsorted ladder, a drained queue tail) round up to
+    the next row-tile multiple with zero rows, and a vocab that is not a
+    multiple of the lane tile rounds up with ``_NEG`` columns — the pads
+    are inert to the online max/sum (exp underflows to exactly 0), cost
+    at most one extra grid row/column, and are sliced off before
+    returning.
+    """
     b, v = logits.shape
-    bb = min(BB, b)
-    bv = min(BV, v)
-    assert v % bv == 0, (b, v)
-    # ragged batches (a 12-row pop off an unsorted ladder, a drained
-    # queue tail) round up to the next row-tile multiple: the pad rows
-    # are zeros — harmless to the online max/sum — cost at most one
-    # extra grid row, and are sliced off before returning
-    pad = -b % bb
-    x = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
-    bp = b + pad
+    bb = min(bb or BB, b)
+    bv = min(bv or BV, v)
+    padv = -v % bv
+    x = logits
+    if padv:
+        x = jnp.pad(x, ((0, 0), (0, padv)), constant_values=_NEG)
+    padb = -b % bb
+    if padb:
+        x = jnp.pad(x, ((0, padb), (0, 0)))
+    bp, vp = b + padb, v + padv
     out, top1 = pl.pallas_call(
         _bvsb_kernel,
-        grid=(bp // bb, v // bv),
+        grid=(bp // bb, vp // bv),
         in_specs=[pl.BlockSpec((bb, bv), lambda i, j: (i, j))],
         out_specs=[pl.BlockSpec((bb,), lambda i, j: (i,)),
                    pl.BlockSpec((bb,), lambda i, j: (i,))],
@@ -97,4 +118,4 @@ def bvsb(logits, *, interpret=False):
         ],
         interpret=interpret,
     )(x)
-    return (out[:b], top1[:b]) if pad else (out, top1)
+    return (out[:b], top1[:b]) if (padb or padv) else (out, top1)

@@ -1,59 +1,193 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Kernel dispatch layer: the single entry point into the Pallas kernels.
 
-On CPU (this container) the kernels run in interpret mode — the kernel
-body executes as traced jnp ops, validating the exact TPU code path. On a
-TPU backend the same calls compile through Mosaic. ``use_kernels(False)``
-(or the REPRO_NO_KERNELS env var) routes everything to the pure-jnp
-references instead — the dry-run lowering path uses that, since Mosaic
-kernels cannot lower for a CPU target.
+Every hot-path consumer (``serving/executables.py::classify``, the
+decision metrics, calibration scoring, the models) calls the public
+functions here; nothing else in the repo may touch ``kernels/bvsb.py``
+and friends directly (HD004 polices that). Dispatch picks one of three
+execution modes — a *bitwise-pinned* choice, not a per-call heuristic:
+
+* ``pallas``    — the Mosaic-compiled kernel. TPU backends only.
+* ``interpret`` — the same kernel body in Pallas interpret mode: the
+  kernel's jaxpr executes as traced jnp ops, so CPU CI validates the
+  exact TPU code path (tiling, scratch accumulators, online rescale).
+  This is the CPU truth source and the default off-TPU.
+* ``ref``       — the pure-jnp oracles in ``kernels/ref.py``. Used by
+  the dry-run lowering path (Mosaic kernels cannot lower for a CPU
+  target) and as the pinned comparison target in tests/bench.
+
+The mode and the autotuned (BB, BV) tiles are surfaced as
+``cache_token()``, which ``serving/executables.py`` folds into its
+process-wide executable cache key: flipping dispatch mid-process can
+never serve a stale executable compiled under the old mode, and two
+modes never silently share one compile cache entry.
+
+Each kernel routes through a module-level jitted ``_*_dispatch`` wrapper
+with the mode (and tiles) as static arguments — these wrappers are the
+jit boundaries the trace-discipline linter traces (they are registered
+in ``analysis/trace_rules.py`` with ``x64=True``, so TD001/TD002 cover
+the kernel bodies under both dtype configs).
+
+Env control: ``REPRO_KERNELS`` ∈ {auto, pallas, interpret, ref, off}
+(``off`` == ``ref``); the legacy ``REPRO_NO_KERNELS=1`` still forces
+``ref``. ``use_kernels(bool)`` / ``kernels_enabled()`` remain as the
+back-compat API over ``set_dispatch`` / ``dispatch_mode``.
 """
 from __future__ import annotations
 
+import functools
+import json
 import os
 
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels import bvsb as _bvsb_mod
 from repro.kernels.bvsb import bvsb as _bvsb
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
-_STATE = {"enabled": os.environ.get("REPRO_NO_KERNELS", "") != "1"}
+MODES = ("pallas", "interpret", "ref")
+
+TUNED_TILES_PATH = os.path.join(os.path.dirname(__file__),
+                                "tuned_tiles.json")
+
+
+def _resolve_auto() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _initial_mode() -> str:
+    if os.environ.get("REPRO_NO_KERNELS", "") == "1":
+        return "ref"
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env == "off":
+        return "ref"
+    if env in MODES:
+        return env
+    return _resolve_auto()
+
+
+_STATE = {"mode": _initial_mode()}
+
+
+def dispatch_mode() -> str:
+    return _STATE["mode"]
+
+
+def set_dispatch(mode: str) -> str:
+    """Pin the execution mode ('auto' re-resolves from the backend).
+    Returns the previous mode so callers can restore it."""
+    if mode == "auto":
+        mode = _resolve_auto()
+    if mode not in MODES:
+        raise ValueError(f"unknown dispatch mode {mode!r}; "
+                         f"expected one of {MODES + ('auto',)}")
+    prev = _STATE["mode"]
+    _STATE["mode"] = mode
+    return prev
 
 
 def use_kernels(enabled: bool) -> None:
-    _STATE["enabled"] = enabled
+    set_dispatch("auto" if enabled else "ref")
 
 
 def kernels_enabled() -> bool:
-    return _STATE["enabled"]
+    return _STATE["mode"] != "ref"
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+@functools.lru_cache(maxsize=None)
+def _tuned_tiles(backend: str):
+    """(bb, bv) for the bvsb kernel: the autotuner's persisted pick for
+    this backend, else the hand-picked defaults in kernels/bvsb.py."""
+    try:
+        with open(TUNED_TILES_PATH, encoding="utf-8") as f:
+            tiles = json.load(f).get(backend)
+        if tiles:
+            return int(tiles["bb"]), int(tiles["bv"])
+    except (OSError, ValueError, KeyError):
+        pass
+    return _bvsb_mod.BB, _bvsb_mod.BV
 
 
-def bvsb(logits):
-    if not kernels_enabled():
+def bvsb_tiles():
+    return _tuned_tiles(jax.default_backend())
+
+
+def reload_tiles() -> None:
+    """Drop the cached tile lookup (after the autotuner rewrites the
+    persisted file)."""
+    _tuned_tiles.cache_clear()
+
+
+def cache_token():
+    """What the executable caches must fold into their keys: everything
+    that changes the compiled artifact without changing arg shapes."""
+    mode = _STATE["mode"]
+    if mode == "ref":
+        return ("ref", 0, 0)
+    bb, bv = bvsb_tiles()
+    return (mode, bb, bv)
+
+
+# ---------------------------------------------------------------------------
+# jitted dispatch wrappers: mode/tiles are static, so each pinned mode
+# compiles exactly once per shape — and the static key means a mode flip
+# is a *different* executable, never a silent in-place retrace
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("mode", "bb", "bv"))
+def _bvsb_dispatch(logits, *, mode, bb, bv):
+    if mode == "ref":
         return _ref.bvsb_ref(logits)
-    return _bvsb(logits, interpret=_interpret())
+    return _bvsb(logits, interpret=(mode == "interpret"), bb=bb, bv=bv)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "causal", "window"))
+def _flash_dispatch(q, k, v, *, mode, causal, window):
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _decode_dispatch(q, k_cache, v_cache, lengths, *, mode):
+    if mode == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode_attn(q, k_cache, v_cache, lengths,
+                        interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _rglru_dispatch(a, u, h0, *, mode):
+    if mode == "ref":
+        return _ref.rglru_scan_ref(a, u, h0)
+    return _rglru(a, u, h0, interpret=(mode == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def bvsb(logits):
+    """(B, V) logits -> (bvsb confidence (B,) f32, top1 (B,) i32)."""
+    mode = _STATE["mode"]
+    if mode == "ref":
+        return _bvsb_dispatch(logits, mode="ref", bb=0, bv=0)
+    bb, bv = bvsb_tiles()
+    return _bvsb_dispatch(logits, mode=mode, bb=bb, bv=bv)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None):
-    if not kernels_enabled():
-        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
-    return _flash(q, k, v, causal=causal, window=window,
-                  interpret=_interpret())
+    return _flash_dispatch(q, k, v, mode=_STATE["mode"], causal=causal,
+                           window=window)
 
 
 def decode_attention(q, k_cache, v_cache, lengths):
-    if not kernels_enabled():
-        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
-    return _decode_attn(q, k_cache, v_cache, lengths, interpret=_interpret())
+    return _decode_dispatch(q, k_cache, v_cache, lengths,
+                            mode=_STATE["mode"])
 
 
 def rglru_scan(a, u, h0=None):
-    if not kernels_enabled():
-        return _ref.rglru_scan_ref(a, u, h0)
-    return _rglru(a, u, h0, interpret=_interpret())
+    return _rglru_dispatch(a, u, h0, mode=_STATE["mode"])

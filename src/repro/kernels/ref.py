@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def bvsb_ref(logits):
@@ -23,13 +24,13 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
     g = h // kvh
     qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
     scores = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
-    scores = scores / jnp.sqrt(hd)
-    qpos = jnp.arange(s)[:, None]
-    kpos = jnp.arange(s)[None, :]
+    scores = scores * np.float32(1.0 / np.sqrt(hd))
+    qpos = jnp.arange(s, dtype=jnp.int32)[:, None]
+    kpos = jnp.arange(s, dtype=jnp.int32)[None, :]
     ok = kpos <= qpos if causal else jnp.ones((s, s), bool)
     if window is not None:
         ok &= (qpos - kpos) < window
-    scores = jnp.where(ok, scores, -1e30)
+    scores = jnp.where(ok, scores, np.float32(-1e30))
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
     return out.reshape(b, s, h, hd).astype(q.dtype)
@@ -46,9 +47,11 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     g = h // kvh
     qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
     scores = jnp.einsum("bkgh,bwkh->bkgw", qg,
-                        k_cache.astype(jnp.float32)) / jnp.sqrt(hd)
-    valid = jnp.arange(w)[None, :] < lengths[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+                        k_cache.astype(jnp.float32)) \
+        * np.float32(1.0 / np.sqrt(hd))
+    valid = jnp.arange(w, dtype=jnp.int32)[None, :] \
+        < lengths[:, None].astype(jnp.int32)
+    scores = jnp.where(valid[:, None, None, :], scores, np.float32(-1e30))
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgw,bwkh->bkgh", p, v_cache.astype(jnp.float32))
     return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Blocked wall-clock timing for sub-millisecond kernel rows.
+
+A fused BvSB call on this container takes tens of microseconds — the same
+order as ``time.perf_counter``'s effective resolution on a loaded host —
+so single-shot timing under-resolves it badly (a 5-rep loop of
+perf_counter pairs can report anything from 0 to 3x the true cost).
+
+The fix is classic: time a *block* of N back-to-back calls with one
+perf_counter pair, growing N until the block wall clears a measured
+floor (``MIN_RES_MULT`` x the observed timer resolution), and report
+wall / N. ``tools/check_bench.py`` gates ``kernel_timer_floor_ok`` so a
+bench row that somehow under-resolved fails CI instead of publishing a
+garbage us/sample number.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+# every reported block must span at least this many timer ticks
+MIN_RES_MULT = 50
+
+
+@functools.lru_cache(maxsize=1)
+def timer_resolution() -> float:
+    """Measured resolution of time.perf_counter, in seconds.
+
+    Takes the smallest positive delta observed over a burst of
+    back-to-back reads. Cached: the resolution is a property of the
+    clocksource, not of the workload.
+    """
+    best = float("inf")
+    for _ in range(200):
+        a = time.perf_counter()
+        b = time.perf_counter()
+        while b == a:  # spin until the clock ticks
+            b = time.perf_counter()
+        best = min(best, b - a)
+    return best
+
+
+def time_blocked(fn, *args, min_block_mult: int = MIN_RES_MULT,
+                 max_reps: int = 1 << 16):
+    """Time ``fn(*args)`` with repeat-N blocked timing.
+
+    ``fn`` must synchronize internally (e.g. end with
+    ``jax.block_until_ready``). Doubles the rep count until one timed
+    block spans at least ``min_block_mult`` timer resolutions, then
+    returns ``(seconds_per_call, block_wall_seconds, reps)``.
+    """
+    floor = min_block_mult * timer_resolution()
+    reps = 1
+    while True:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn(*args)
+        wall = time.perf_counter() - t0
+        if wall >= floor or reps >= max_reps:
+            return wall / reps, wall, reps
+        # jump straight to the projected rep count (with 2x headroom)
+        # rather than doubling through many under-floor blocks
+        projected = int(reps * max(2.0, 2.0 * floor / max(wall, 1e-12)))
+        reps = min(max_reps, projected)

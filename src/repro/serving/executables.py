@@ -25,6 +25,14 @@ dataclass: deterministic, value-complete); parameters enter the key by
 tree structure + leaf shapes/dtypes only — values are call arguments of
 the cached function, so switching parameter sets (e.g. a re-trained
 model of the same shape) reuses the executable.
+
+The key also folds in ``kernels.ops.cache_token()`` — the kernel
+dispatch mode and autotuned tiles. The confidence metric inside the
+forward routes through the kernel dispatch layer, and the mode is read
+at *trace* time: without the token, ``use_kernels(False)`` after a warm
+run would keep serving executables whose traced graph still bakes in
+the kernel path (or vice versa). With it, each pinned dispatch
+configuration owns its executables.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 
 from repro.core import decision
+from repro.kernels import ops as kops
 
 _CACHE: Dict[Tuple, Callable] = {}
 _HITS = 0
@@ -55,7 +64,8 @@ def classify_fn(model, params, bucket: int,
     process-wide across clients, engines and served models.
     """
     global _HITS, _MISSES
-    key = (_arch_key(model), _shape_key(params), int(bucket), metric)
+    key = (_arch_key(model), _shape_key(params), int(bucket), metric,
+           kops.cache_token())
     fn = _CACHE.get(key)
     if fn is None:
         _MISSES += 1

@@ -9,17 +9,30 @@ together the three engines are pinned pairwise.
 Also negative-tests the ``fig_serving`` gates of tools/check_bench.py:
 each serving gate must actually reject a regression, and silently
 dropping a gated metric must fail, not pass.
+
+The kernel-dispatch sections run the same differential with the kernel
+dispatch layer forced ON (Pallas interpret) and OFF (``ref`` oracles):
+stream confidences are synthesized *through the scoring path itself*
+(two-hot logits whose BvSB inverts back to the stream's confidence), so
+the serving run genuinely acts on kernel output and on/off equivalence
+is non-vacuous. A companion compile guard mirrors the
+``benchmarks/fig_serving.py`` probe with dispatch pinned on: warming
+the ladder stays within one compile per bucket (+ the shared client
+forward) and a second, larger fleet compiles nothing.
 """
 import importlib.util
 import json
 import pathlib
 import sys
 
+import compile_guard
 import numpy as np
 import pytest
 
 from repro.configs import scenarios
 from repro.configs.cascade_tiers import ServerProfile
+from repro.core import calibration
+from repro.kernels import ops
 from repro.serving.replay import SERVING_TOL, serving_vs_sim
 from repro.sim import synthetic
 
@@ -72,6 +85,133 @@ def test_serving_matches_sim_under_drift_and_switching():
     assert d["d_sr"] <= tol["sr"]
     assert d["d_thr_rel"] <= tol["thr_rel"]
     assert d["d_fwd"] <= tol["fwd"]
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch ON vs OFF through the live serving path
+# ---------------------------------------------------------------------------
+V_SCORE = 64  # vocab of the synthesized logit rows
+
+
+def _scored_scenario(mode):
+    """Rebuild the steady scenario with confidences produced by the
+    kernel scoring path under dispatch ``mode``: each stream confidence
+    c is inverted into a two-hot logit row (hot value
+    log((1 + c(V-1)) / (1 - c)), the closed-form inverse of the BvSB
+    margin), scored back through ``calibration.score_logits``."""
+    st, lat, join_t, leave_t = _scenario("steady")
+    conf = np.asarray(st["confidence"], np.float32)
+    n, s = conf.shape
+    c = np.clip(conf.astype(np.float64), 1e-4, 0.999)
+    hot_val = np.log((1.0 + c * (V_SCORE - 1)) / (1.0 - c))
+    logits = np.zeros((n * s, V_SCORE), np.float32)
+    hot_idx = np.arange(n * s) % V_SCORE
+    logits[np.arange(n * s), hot_idx] = \
+        hot_val.reshape(-1).astype(np.float32)
+    prev = ops.set_dispatch(mode)
+    try:
+        scored, pred = calibration.score_logits(logits)
+    finally:
+        ops.set_dispatch(prev)
+    # the scoring path recovers the hot class and (to float32 rounding)
+    # the stream confidence — proof the differential acts on kernel
+    # output, not on pass-through numbers
+    assert np.array_equal(pred, hot_idx)
+    np.testing.assert_allclose(scored, c.reshape(-1), atol=5e-3)
+    st = dict(st)
+    st["confidence"] = scored.reshape(n, s).astype(np.float32)
+    return st, lat, join_t, leave_t
+
+
+def test_serving_differential_kernel_dispatch_on_vs_off():
+    live = {}
+    slo = np.full(N, SLO, np.float32)
+    tol = SERVING_TOL["multitasc++"]
+    for mode in ("interpret", "ref"):
+        st, lat, join_t, leave_t = _scored_scenario(mode)
+        lv, sim, d = serving_vs_sim("multitasc++", st, lat, slo,
+                                    SERVERS, join_t=join_t,
+                                    leave_t=leave_t)
+        # each mode individually tracks the simulator
+        assert d["d_completed"] == 0, mode
+        assert d["d_sr"] <= tol["sr"], mode
+        assert d["d_thr_rel"] <= tol["thr_rel"], mode
+        assert d["d_fwd"] <= tol["fwd"], mode
+        live[mode] = lv
+    on, off = live["interpret"], live["ref"]
+    # dispatch on vs off: same sample set exactly, metrics within the
+    # documented replay tolerance (kernel-vs-oracle rounding can flip a
+    # knife-edge threshold comparison, nothing more)
+    assert on.completed == off.completed
+    assert abs(on.sr - off.sr) <= tol["sr"]
+    assert abs(on.throughput - off.throughput) \
+        / max(off.throughput, 1e-9) <= tol["thr_rel"]
+    assert abs(on.forwarded_frac - off.forwarded_frac) <= tol["fwd"]
+
+
+def test_kernel_dispatch_serving_compile_budget():
+    """fig_serving's compile probe, run with kernel dispatch pinned ON:
+    warming every ladder bucket + a cold fleet compiles at most one
+    executable per distinct bucket (+ the shared client b=1 forward),
+    and a second, LARGER fleet over the same warm models compiles
+    nothing — kernel dispatch must not break executable sharing."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.cascade_tiers import (BATCH_LADDER,
+                                             DEVICE_PROFILES,
+                                             SERVER_PROFILES)
+    from repro.models.model import build_model
+    from repro.serving import executables
+    from repro.serving.cascade import run_cascade
+    from repro.serving.client import DeviceClient
+    from repro.serving.engine import ServedModel, ServerEngine
+    from repro.sim.events import make_scheduler
+
+    lcfg = get_config("tier-low")
+    light, hm = build_model(lcfg), build_model(
+        get_config("tier-server-fast"))
+    lp, hp = light.init(jax.random.key(0)), hm.init(jax.random.key(1))
+
+    def fleet(n):
+        rng = np.random.default_rng(3)
+        clients = [DeviceClient(i, light, lp, DEVICE_PROFILES["low"],
+                                slo=0.15, window=1.5, threshold=0.6)
+                   for i in range(n)]
+        engine = ServerEngine([
+            ServedModel("fast", hm, hp, SERVER_PROFILES["inceptionv3"]),
+            ServedModel("heavy", hm, hp,
+                        SERVER_PROFILES["efficientnetb3"]),
+        ])
+        datasets = [[np.asarray(rng.integers(0, lcfg.vocab_size, 8),
+                                np.int32) for _ in range(4)]
+                    for _ in range(n)]
+        sched = make_scheduler(
+            "static", n, server_profile=SERVER_PROFILES["inceptionv3"],
+            slo=0.15, static_threshold=0.6)
+        return clients, engine, sched, datasets
+
+    prev = ops.set_dispatch("interpret")
+    executables.clear_cache()
+    try:
+        max_b = max(SERVER_PROFILES["inceptionv3"].max_batch,
+                    SERVER_PROFILES["efficientnetb3"].max_batch)
+        buckets = [b for b in BATCH_LADDER if b <= max_b]
+        with compile_guard.compile_counter() as cold:
+            for b in buckets:
+                fn = executables.classify_fn(hm, hp, b)
+                fn(hp, np.zeros((b, 8), np.int32))
+            clients, engine, sched, datasets = fleet(5)
+            run_cascade(clients, engine, sched, datasets)
+        assert cold.backend_compiles <= len(buckets) + 1, \
+            f"dispatch broke bucket sharing: {cold.backend_compiles} " \
+            f"compiles for {len(buckets)} buckets + 1 client forward"
+        with compile_guard.no_recompiles():
+            clients, engine, sched, datasets = fleet(8)
+            run_cascade(clients, engine, sched, datasets)
+    finally:
+        ops.set_dispatch(prev)
+        executables.clear_cache()
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,18 @@ Hard failures (exit 1):
     ``serving_extra_client_compiles != 0`` (growing the fleet over the
     same models recompiled something).
 
+  * a ``kernels`` gate failure (benchmarks/kernels_bench.py): the
+    kernel dispatch layer's numerics drifted from the ``kernels/ref.py``
+    oracles beyond ``KERNEL_NUMERIC_ATOL`` or any BvSB top-1 index
+    disagreed (``kernel_top1_mismatch != 0`` — the cascade acts on the
+    index, so one mismatch is a wrong forwarding decision), or
+    re-invoking every warm kernel row compiled something
+    (``kernel_warm_compiles != 0``), or a timed block failed to clear
+    the measured timer-resolution floor (``kernel_timer_floor_ok !=
+    1`` — the published us/sample would be noise). All four fail
+    closed: a kernels row *missing* any of these keys fails, so a bench
+    edit cannot silently un-gate the kernels.
+
   * a ``fig_async`` failure (benchmarks/fig_async.py): an
     ``async_d_*`` sim-vs-async-serving delta exceeds its
     ``ASYNC_DELTA_LIMITS`` entry or ``async_d_completed != 0`` (the
@@ -94,6 +106,11 @@ ASYNC_DELTA_LIMITS = {
 # minimum sync-over-async wall speedup on the sleep-balanced overlap
 # probe (measured ~1.6x; a serialized transport regression lands ~1.0x)
 ASYNC_SPEEDUP_MIN = 1.3
+# kernels: worst kernel-vs-oracle abs error (benchmarks/kernels_bench
+# .py; measured ~1e-6 interpret-vs-ref — the margin covers bf16 inputs
+# and accumulation-order drift on real hardware, not bugs: a mistiled
+# kernel lands orders of magnitude above)
+KERNEL_NUMERIC_ATOL = 2e-3
 
 
 def main() -> int:
@@ -258,6 +275,47 @@ def main() -> int:
                     f"{fig}: serving_extra_client_compiles "
                     f"{n['serving_extra_client_compiles']} != 0 (adding "
                     f"clients over warm models recompiled)")
+        if "kernel_numerics_max_err" in b:
+            if n.get("kernel_numerics_max_err") is None:
+                failures.append(
+                    f"{fig}: kernel_numerics_max_err missing from new "
+                    f"run")
+            elif n["kernel_numerics_max_err"] > KERNEL_NUMERIC_ATOL:
+                failures.append(
+                    f"{fig}: kernel_numerics_max_err "
+                    f"{n['kernel_numerics_max_err']:.3e} > "
+                    f"{KERNEL_NUMERIC_ATOL} (a kernel diverged from its "
+                    f"kernels/ref.py oracle)")
+        if "kernel_top1_mismatch" in b:
+            if n.get("kernel_top1_mismatch") is None:
+                failures.append(
+                    f"{fig}: kernel_top1_mismatch missing from new run")
+            elif n["kernel_top1_mismatch"] != 0:
+                failures.append(
+                    f"{fig}: kernel_top1_mismatch "
+                    f"{n['kernel_top1_mismatch']} != 0 (BvSB top-1 "
+                    f"disagreed with the oracle: the cascade would make "
+                    f"a wrong forwarding/prediction decision)")
+        if "kernel_warm_compiles" in b:
+            if n.get("kernel_warm_compiles") is None:
+                failures.append(
+                    f"{fig}: kernel_warm_compiles missing from new run")
+            elif n["kernel_warm_compiles"] != 0:
+                failures.append(
+                    f"{fig}: kernel_warm_compiles "
+                    f"{n['kernel_warm_compiles']} != 0 (re-invoking warm "
+                    f"kernel rows recompiled: a dispatch static arg is "
+                    f"unstable)")
+        if "kernel_timer_floor_ok" in b:
+            if n.get("kernel_timer_floor_ok") is None:
+                failures.append(
+                    f"{fig}: kernel_timer_floor_ok missing from new run")
+            elif n["kernel_timer_floor_ok"] != 1:
+                failures.append(
+                    f"{fig}: kernel_timer_floor_ok "
+                    f"{n['kernel_timer_floor_ok']} != 1 (a timed block "
+                    f"under-ran the measured timer resolution floor; "
+                    f"its us/sample is noise)")
         if b.get("wall_s"):
             ratio = n["wall_s"] / b["wall_s"]
             line = (f"{fig}: wall {n['wall_s']:.3f}s vs baseline "
